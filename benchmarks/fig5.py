@@ -1,0 +1,63 @@
+"""Fig. 5 reproduction: 6 apps x 6 inputs x design-space configs, measured
+execution time (converged runs, compile excluded) on the TPU-analogue
+design space.  Static apps: TG0 + push {SG1, SGR, SD1, SDR} (the paper's
+five shown bars); CC: DG1, DGR, DD1, DDR.
+
+CPU wall-times stand in for the paper's simulated-GPU cycle counts: the
+reproduction claim is qualitative (config rankings vary per workload; no
+single winner), the exact ratios are hardware-specific by design.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.algorithms import REGISTRY
+from repro.core import SystemConfig, run
+from repro.graph.datasets import PAPER_GRAPHS, paper_graph
+
+__all__ = ["run_fig5", "STATIC_SHOWN", "DYNAMIC_SHOWN"]
+
+STATIC_SHOWN = ("TG0", "SG1", "SGR", "SD1", "SDR")
+DYNAMIC_SHOWN = ("DG1", "DGR", "DD1", "DDR")
+SCALE = 32
+REPEATS = 3
+
+
+def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None):
+    apps = apps or list(REGISTRY)
+    graphs = graphs or list(PAPER_GRAPHS)
+    results = {}
+    for gname in graphs:
+        for app in apps:
+            program = REGISTRY[app]()
+            g = paper_graph(gname, scale=scale, weighted=program.weighted)
+            configs = DYNAMIC_SHOWN if app == "CC" else STATIC_SHOWN
+            row = {}
+            for cname in configs:
+                cfg = SystemConfig.from_name(cname)
+                best = float("inf")
+                iters = 0
+                for rep in range(REPEATS):
+                    r = run(program, g, cfg, key=jax.random.key(0))
+                    best = min(best, r.seconds)
+                    iters = r.iterations
+                row[cname] = {"seconds": best, "iterations": iters}
+            base = row[configs[0]]["seconds"]
+            for cname in configs:
+                row[cname]["normalized"] = row[cname]["seconds"] / base
+            best_cfg = min(row, key=lambda c: row[c]["seconds"])
+            results[f"{gname}/{app}"] = {"configs": row, "best": best_cfg}
+            print(f"{gname}/{app}: best={best_cfg} "
+                  + " ".join(f"{c}={row[c]['seconds']*1e3:.1f}ms"
+                             for c in configs), flush=True)
+    Path(out_dir).mkdir(exist_ok=True, parents=True)
+    Path(out_dir, "fig5.json").write_text(json.dumps(results, indent=2))
+    return results
+
+
+if __name__ == "__main__":
+    run_fig5()

@@ -1,0 +1,45 @@
+"""Fig. 6 reproduction: workloads where SGR is NOT optimal — execution
+time of the best (and predicted) config relative to SGR."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+__all__ = ["run_fig6"]
+
+
+def run_fig6(out_dir="results", fig5_path="results/fig5.json"):
+    fig5 = json.loads(Path(fig5_path).read_text())
+    rows = {}
+    reductions = []
+    for key, entry in fig5.items():
+        cfgs = entry["configs"]
+        ref = "SGR" if "SGR" in cfgs else "DGR"
+        best = entry["best"]
+        if best == ref:
+            continue
+        red = 1.0 - cfgs[best]["seconds"] / cfgs[ref]["seconds"]
+        rows[key] = {
+            "ref": ref,
+            "best": best,
+            "best_over_ref": round(cfgs[best]["seconds"]
+                                   / cfgs[ref]["seconds"], 4),
+            "reduction_pct": round(100 * red, 1),
+        }
+        reductions.append(red)
+    out = {
+        "cases": rows,
+        "n_cases": len(rows),
+        "avg_reduction_pct": round(100 * sum(reductions)
+                                   / max(len(reductions), 1), 1),
+        "max_reduction_pct": round(100 * max(reductions, default=0.0), 1),
+    }
+    Path(out_dir, "fig6.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    res = run_fig6()
+    print(f"{res['n_cases']} workloads where the reference config is "
+          f"not optimal; avg reduction {res['avg_reduction_pct']}%, "
+          f"max {res['max_reduction_pct']}%")

@@ -1,0 +1,201 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline) from dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+    compute    = FLOPs / (chips x 197e12)           [bf16 peak / chip]
+    memory     = HBM bytes / (chips x 819e9)
+    collective = collective bytes / (chips x 50e9)  [ICI link BW]
+
+FLOPs/bytes come from two sources, both reported:
+- ``hlo_*``: ``compiled.cost_analysis()`` — NOTE XLA counts while-loop
+  (scan) bodies ONCE, so scanned models are undercounted by ~n_layers x.
+- ``analytic_*``: closed-form per family (the standard MFU convention);
+  used for the roofline terms.  MODEL_FLOPS = 6*N*D (dense) or
+  6*N_active*D (MoE); the ratio MODEL_FLOPS/analytic total shows how much
+  compiled compute is "useful".
+
+Collective bytes are parsed from post-SPMD HLO (per-device shapes); the
+same while-body caveat applies and is listed per cell.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.registry import get_arch
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+__all__ = ["analyze", "analytic_cell"]
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOP / byte models
+# ---------------------------------------------------------------------------
+def _lm_terms(cfg, shape, moe=False):
+    L, d, hq, hkv, dh = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                         cfg.n_kv_heads, cfg.d_head)
+    v = cfg.vocab
+    n_total = cfg.n_params
+    n_active = cfg.n_active_params if moe else n_total
+    p_bytes = 2 * n_total                      # bf16
+    opt_bytes = 8 * n_total                    # 2 x fp32 moments
+    if shape == "train_4k":
+        b, s = 256, 4096
+        t = b * s
+        flops = 6 * n_active * t
+        win = cfg.window or s
+        flops += 12 * L * b * hq * dh * s * min(s, win) * 0.5  # causal attn
+        bytes_ = 3 * p_bytes + 2 * opt_bytes \
+            + 12 * L * t * d                   # act r/w + remat reread, bf16
+        return flops, bytes_, t
+    if shape == "prefill_32k":
+        b, s = 32, 32768
+        t = b * s
+        flops = 2 * n_active * t
+        win = cfg.window or s
+        flops += 4 * L * b * hq * dh * s * min(s, win) * 0.5
+        bytes_ = p_bytes + 6 * L * t * d
+        return flops, bytes_, t
+    # decode shapes: one token per sequence
+    b, s = (128, 32768) if shape == "decode_32k" else (1, 524288)
+    win = cfg.window or s
+    kv = min(s, win)
+    flops = 2 * n_active * b + 4 * L * b * hq * dh * kv
+    cache_bytes = 2 * L * b * hkv * s * dh * 2      # k+v bf16 (allocated)
+    read_cache = 2 * L * b * hkv * kv * dh * 2      # bytes actually read
+    bytes_ = p_bytes + read_cache
+    return flops, bytes_, b
+
+
+def _gnn_terms(name, dims):
+    n, e = dims["n_nodes"], dims["n_edges"]
+    if name == "meshgraphnet":
+        h, L = 128, 15
+        fl = 3 * L * (8 * e * h * h + 6 * n * h * h)
+        by = 3 * L * (e * h * 4 * 3 + n * h * 4 * 3)
+    elif name == "schnet":
+        h, L, rbf = 64, 3, 300
+        fl = 3 * L * (2 * e * (rbf * h + h * h) + 6 * n * h * h)
+        by = 3 * L * (e * (rbf + h) * 4 + n * h * 4 * 3)
+    elif name == "pna":
+        h, L = 75, 4
+        fl = 3 * L * (4 * e * h * h + 26 * n * h * h)
+        by = 3 * L * (e * h * 4 * 2 + n * 13 * h * 4)
+    else:  # equiformer-v2 (estimate; SH+Wigner+SO2+node linear)
+        c, L, k = 128, 12, 49
+        per_edge = 940 * c + 120 * c * c + 64 * k * 12   # rot+conv+SH
+        per_node = 2 * k * c * c + 8 * c * c
+        fl = 3 * L * (e * per_edge + n * per_node)
+        by = 3 * L * (e * k * c * 4 + n * k * c * 4) // 4
+    return fl, by, n
+
+
+def _dlrm_terms(cfg, shape):
+    d = cfg.embed_dim
+    bot = [(13, 512), (512, 256), (256, 128)]
+    nf = cfg.n_sparse + 1
+    n_int = nf * (nf - 1) // 2 + d
+    top = [(n_int, 1024), (1024, 1024), (1024, 512), (512, 256), (256, 1)]
+    mlp_flops = 2 * (sum(a * b for a, b in bot) + sum(a * b for a, b in top))
+    inter = 2 * nf * nf * d
+    if shape == "train_batch":
+        b = 65536
+        fl = 3 * b * (mlp_flops + inter)
+        by = b * cfg.n_sparse * d * 4 * 3 + b * (13 + n_int) * 4 * 3
+        return fl, by, b
+    if shape == "serve_p99":
+        b = 512
+    elif shape == "serve_bulk":
+        b = 262144
+    else:  # retrieval_cand
+        nc = 1000448
+        fl = 2 * nc * d + mlp_flops
+        by = nc * d * 4
+        return fl, by, 1
+    fl = b * (mlp_flops + inter)
+    by = b * cfg.n_sparse * d * 4 + b * (13 + n_int) * 4
+    return fl, by, b
+
+
+def analytic_cell(arch_name, shape):
+    arch = get_arch(arch_name)
+    if arch.family in ("lm", "moe"):
+        fl, by, unit = _lm_terms(arch.cfg, shape, moe=arch.family == "moe")
+        n = arch.cfg.n_params
+        n_act = getattr(arch.cfg, "n_active_params", n)
+        tokens = unit
+        model_flops = 6 * n_act * tokens if shape.startswith("train") \
+            else 2 * n_act * tokens
+        return fl, by, model_flops
+    if arch.family == "gnn":
+        from repro.configs.base import GNN_SHAPES
+        fl, by, _ = _gnn_terms(arch_name, GNN_SHAPES[shape])
+        return fl, by, fl
+    fl, by, _ = _dlrm_terms(arch.cfg, shape)
+    return fl, by, fl
+
+
+# ---------------------------------------------------------------------------
+def analyze(dryrun_dir="results/dryrun", out="results/roofline.json",
+            mesh="single"):
+    rows = []
+    for path in sorted(Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        d = json.loads(path.read_text())
+        if not d.get("ok"):
+            continue
+        chips = d["n_devices"]
+        arch, shape = d["arch"], d["shape"]
+        fl, by, model_fl = analytic_cell(arch, shape)
+        coll = d.get("collectives", {})
+        coll_bytes = sum(v.get("bytes", 0) for v in coll.values()
+                         if isinstance(v, dict))
+        t_comp = fl / (chips * PEAK_FLOPS)
+        t_mem = by / (chips * HBM_BW)
+        t_coll = coll_bytes / ICI_BW          # already per-device bytes
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        hlo_fl = d.get("cost", {}).get("flops", -1)
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": d["mesh"],
+            "chips": chips,
+            "analytic_flops": fl,
+            "hlo_flops_per_dev_raw": hlo_fl,
+            "model_flops": model_fl,
+            "useful_ratio": round(model_fl / fl, 3) if fl else None,
+            "analytic_bytes": by,
+            "collective_bytes_per_dev": coll_bytes,
+            "collectives": coll,
+            "t_compute_s": t_comp,
+            "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "roofline_bound_s": bound,
+            "roofline_fraction": round(t_comp / bound, 4) if bound else None,
+            "memory_per_dev_bytes": d.get("memory", {}).get("peak_bytes"),
+        })
+    Path(out).write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+def to_markdown(rows):
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | "
+           "dominant | peak GB/dev | useful |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    fmt = lambda s: f"{s*1e3:.2f}ms" if s >= 1e-3 else f"{s*1e6:.0f}us"
+    for r in rows:
+        mem = r["memory_per_dev_bytes"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | "
+            f"{mem/1e9:.2f} | {r['useful_ratio']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = analyze()
+    print(to_markdown(rows))

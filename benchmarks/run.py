@@ -1,0 +1,82 @@
+"""Benchmark harness entry point — one section per paper artifact.
+
+Prints ``name,us_per_call,derived`` CSV rows; detailed JSON lands in
+results/.  Fast subsets by default so `python -m benchmarks.run` finishes
+on one CPU; pass --full for the complete Fig. 5 grid.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.fig5 import run_fig5
+from benchmarks.fig6 import run_fig6
+from benchmarks.table2 import run_table2
+from benchmarks.table5 import run_table5
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 6x6 Fig.5 grid (slow); default is a "
+                         "representative subset")
+    ap.add_argument("--scale", type=int, default=32)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    t0 = time.perf_counter()
+    rows = run_table2()
+    dt = (time.perf_counter() - t0) / max(len(rows), 1)
+    n_class_ok = sum(
+        r["computed_from_published"]["vol_class"]
+        == r["published"]["vol_class"] for r in rows)
+    print(f"table2_profile,{dt*1e6:.0f},vol_class_match={n_class_ok}/6")
+
+    graphs = None if args.full else ["DCT", "RAJ", "OLS", "WNG"]
+    apps = None if args.full else ["PR", "SSSP", "MIS", "CLR", "CC"]
+    t0 = time.perf_counter()
+    fig5 = run_fig5(scale=args.scale, graphs=graphs, apps=apps)
+    n_cells = len(fig5)
+    dt = (time.perf_counter() - t0) / max(n_cells, 1)
+    n_best_not_ref = sum(1 for v in fig5.values()
+                         if v["best"] not in ("TG0", "DG1"))
+    print(f"fig5_sweep,{dt*1e6:.0f},cells={n_cells};"
+          f"best_differs_from_ref={n_best_not_ref}")
+
+    t0 = time.perf_counter()
+    t5 = run_table5(scale=args.scale)
+    dt = time.perf_counter() - t0
+    print(f"table5_model,{dt*1e6:.0f},"
+          f"paper_faithful={t5['paper_faithful']['match_table_v']};"
+          f"deployed_hits={t5['deployed_exact_hits']}")
+
+    t0 = time.perf_counter()
+    f6 = run_fig6()
+    dt = time.perf_counter() - t0
+    print(f"fig6_flexibility,{dt*1e6:.0f},cases={f6['n_cases']};"
+          f"avg_reduction={f6['avg_reduction_pct']}%")
+
+    # roofline (requires dry-run artifacts; skipped gracefully otherwise)
+    try:
+        from benchmarks.roofline import analyze
+        src = "results/dryrun_opt" if Path("results/dryrun_opt").exists() \
+            else "results/dryrun"
+        rows = analyze(dryrun_dir=src)
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"] or 1)
+            print(f"roofline,{len(rows)},cells={len(rows)};"
+                  f"worst_fraction={worst['roofline_fraction']}"
+                  f"@{worst['arch']}/{worst['shape']}")
+        else:
+            print("roofline,0,no_dryrun_artifacts")
+    except Exception as exc:  # pragma: no cover
+        print(f"roofline,0,error={exc}")
+
+
+if __name__ == "__main__":
+    main()

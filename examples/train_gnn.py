@@ -1,0 +1,59 @@
+"""Train a PNA node classifier end to end with the full substrate:
+sharded data pipeline, AdamW, async checkpointing, preemption guard,
+straggler tracking — a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_gnn.py --steps 200
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.data.synthetic import gnn_batch
+from repro.graph import powerlaw_graph
+from repro.models.gnn.pna import pna_loss
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.train.trainer import TrainLoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_gnn_ckpt")
+    args = ap.parse_args()
+
+    arch = get_arch("pna")
+    cfg = arch.reduced_cfg
+    graph = powerlaw_graph(512, 4000, alpha=1.0, seed=0, block_size=64)
+    params = arch.init_params(jax.random.key(0), cfg)
+    opt_cfg = AdamWConfig(lr=3e-3)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: pna_loss(cfg, p, batch))(params)
+        p, o, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        return p, o, {"loss": loss, "grad_norm": gnorm}
+
+    # fixed labels -> the model must actually fit something
+    fixed = gnn_batch(0, graph, cfg.d_in, cfg.n_classes)
+
+    def make_batch(s):
+        b = dict(fixed)
+        return jax.tree.map(jnp.asarray, b)
+
+    loop_cfg = TrainLoopConfig(total_steps=args.steps, checkpoint_every=50,
+                               log_every=20, checkpoint_dir=args.ckpt)
+    params, opt, history = train_loop(
+        step, params, make_batch, loop_cfg,
+        log_fn=lambda r: print(f"step {r['step']:>4} "
+                               f"loss {r['loss']:.4f} "
+                               f"({r['seconds']*1e3:.0f} ms)"))
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"\nloss {first:.4f} -> {last:.4f} over {len(history)} steps "
+          f"(checkpoints in {args.ckpt})")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: push/pull x coherence x consistency specialization for graph
+analytics (Salvador et al., CS.DC 2020), rebuilt as a multi-pod JAX/TPU
+framework.  See DESIGN.md for the system inventory."""
+
+__version__ = "1.0.0"

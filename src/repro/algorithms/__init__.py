@@ -1,0 +1,19 @@
+"""The paper's six applications (Sec. V-B) as VertexPrograms."""
+from repro.algorithms.bc import bc
+from repro.algorithms.cc import cc
+from repro.algorithms.coloring import coloring
+from repro.algorithms.mis import mis
+from repro.algorithms.pagerank import pagerank
+from repro.algorithms.sssp import sssp
+
+#: name -> zero-arg factory with paper-default parameters
+REGISTRY = {
+    "PR": pagerank,
+    "SSSP": sssp,
+    "MIS": mis,
+    "CLR": coloring,
+    "BC": bc,
+    "CC": cc,
+}
+
+__all__ = ["pagerank", "sssp", "mis", "coloring", "bc", "cc", "REGISTRY"]

@@ -1,0 +1,80 @@
+"""Betweenness Centrality (BC, Brandes, single root) — Table III: static,
+source control, symmetric information.
+
+Two stages inside one uniform step (lax.cond): forward BFS accumulating
+shortest-path counts sigma, then backward level-by-level dependency
+accumulation  delta[v] = sigma[v] * sum_{w in succ(v)} (1+delta[w])/sigma[w].
+The backward reduce runs over the (symmetric) edge set with exact level
+predicates on both endpoints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex_program import SUM, EdgePhase, VertexProgram
+
+__all__ = ["bc"]
+
+
+def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
+    fwd = EdgePhase(
+        monoid=SUM,
+        vprop=lambda st, src, w: st["sigma"][src],
+        spred=lambda st, src: st["depth"][src] == st["cur_level"],
+        tpred=lambda st, dst: st["depth"][dst] == -1,
+    )
+    bwd = EdgePhase(
+        monoid=SUM,
+        vprop=lambda st, src, w: (1.0 + st["delta"][src])
+        / jnp.maximum(st["sigma"][src], 1e-30),
+        spred=lambda st, src: st["depth"][src] == st["cur_level"] + 1,
+        tpred=lambda st, dst: st["depth"][dst] == st["cur_level"],
+    )
+
+    def init(graph, key=None):
+        v = graph.n_nodes
+        return {
+            "depth": jnp.full((v,), -1, jnp.int32).at[root].set(0),
+            "sigma": jnp.zeros((v,), jnp.float32).at[root].set(1.0),
+            "delta": jnp.zeros((v,), jnp.float32),
+            "cur_level": jnp.int32(0),
+            "phase": jnp.int32(0),  # 0 = forward, 1 = backward
+        }
+
+    def step(ctx, st, it):
+        def forward(st):
+            contrib = ctx.propagate(st, fwd)
+            newly = (st["depth"] == -1) & (contrib > 0)
+            depth = jnp.where(newly, st["cur_level"] + 1, st["depth"])
+            sigma = jnp.where(newly, contrib, st["sigma"])
+            any_new = jnp.any(newly)
+            # forward done -> deepest level is cur_level; backward starts
+            # one above the deepest (its delta is identically zero).
+            return {
+                **st, "depth": depth, "sigma": sigma,
+                "phase": jnp.where(any_new, 0, 1).astype(jnp.int32),
+                "cur_level": jnp.where(any_new, st["cur_level"] + 1,
+                                       st["cur_level"] - 1).astype(jnp.int32),
+            }
+
+        def backward(st):
+            red = ctx.propagate(st, bwd)
+            hit = st["depth"] == st["cur_level"]
+            delta = jnp.where(hit, st["sigma"] * red, st["delta"])
+            return {**st, "delta": delta,
+                    "cur_level": (st["cur_level"] - 1).astype(jnp.int32)}
+
+        return jax.lax.cond(st["phase"] == 0, forward, backward, st)
+
+    def converged(prev, cur):
+        return (cur["phase"] == 1) & (cur["cur_level"] < 0)
+
+    def extract(st):
+        # dependency scores; the root's own value is excluded by convention
+        return st["delta"].at[root].set(0.0)
+
+    return VertexProgram(
+        name="BC", init=init, step=step, converged=converged,
+        extract=extract, weighted=False, max_iters=max_iters,
+    )

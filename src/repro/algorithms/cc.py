@@ -1,0 +1,55 @@
+"""Connected Components (CC) — dynamic traversal (Table III: '-').
+
+Adapted from the ECL-CC style of Jaiganesh & Burtscher [26]: per round,
+(1) *hooking* — a min-label reduce over graph edges, alternating push/pull
+direction per round (the paper's "non-deterministic source/target
+direction"), and (2) *pointer jumping* — label[v] <- label[label[v]],
+which chases transitive edges that are NOT in the input graph: the
+data-dependent, dynamic traversal that precludes a static push/pull choice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config_space import UpdateProp
+from repro.core.vertex_program import MIN, EdgePhase, VertexProgram
+
+__all__ = ["cc"]
+
+_JUMPS_PER_ROUND = 2
+
+
+def cc(max_iters: int = 512) -> VertexProgram:
+    phase = EdgePhase(
+        monoid=MIN,
+        vprop=lambda st, src, w: st["label"][src],
+    )
+
+    def init(graph, key=None):
+        v = graph.n_nodes
+        return {"label": jnp.arange(v, dtype=jnp.int32)}
+
+    def step(ctx, st, it):
+        # hooking: racy min-label updates; direction alternates per round
+        # (lax.cond executes exactly one branch at runtime)
+        nbr_min = jax.lax.cond(
+            it % 2 == 0,
+            lambda s: ctx.propagate(s, phase, direction=UpdateProp.PUSH,
+                                    dtype=jnp.int32),
+            lambda s: ctx.propagate(s, phase, direction=UpdateProp.PULL,
+                                    dtype=jnp.int32),
+            st)
+        label = jnp.minimum(st["label"], nbr_min)
+        # pointer jumping over transitive (dynamic) edges
+        for _ in range(_JUMPS_PER_ROUND):
+            label = label[label]
+        return {"label": label}
+
+    def converged(prev, cur):
+        return jnp.all(prev["label"] == cur["label"])
+
+    return VertexProgram(
+        name="CC", init=init, step=step, converged=converged,
+        extract=lambda st: st["label"], weighted=False, max_iters=max_iters,
+    )

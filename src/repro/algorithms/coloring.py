@@ -1,0 +1,43 @@
+"""Graph Coloring (CLR, Jones-Plassmann) — Table III: static, symmetric
+control, *target* information (the pull form hoists the target's
+forbidden-color bookkeeping out of the inner loop).
+Round r: every uncolored vertex whose priority beats every uncolored
+neighbor takes color r.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex_program import MAX, EdgePhase, VertexProgram
+
+__all__ = ["coloring"]
+
+
+def coloring(max_iters: int = 512) -> VertexProgram:
+    phase = EdgePhase(
+        monoid=MAX,
+        vprop=lambda st, src, w: st["priority"][src],
+        spred=lambda st, src: st["color"][src] < 0,
+        tpred=lambda st, dst: st["color"][dst] < 0,
+    )
+
+    def init(graph, key=None):
+        key = key if key is not None else jax.random.key(1)
+        v = graph.n_nodes
+        priority = jax.random.permutation(key, v).astype(jnp.float32)
+        return {"color": jnp.full((v,), -1, jnp.int32), "priority": priority}
+
+    def step(ctx, st, it):
+        max_nbr = ctx.propagate(st, phase)  # -inf when no uncolored nbr
+        win = (st["color"] < 0) & (st["priority"] > max_nbr)
+        color = jnp.where(win, it, st["color"])
+        return {**st, "color": color}
+
+    def converged(prev, cur):
+        return jnp.all(cur["color"] >= 0)
+
+    return VertexProgram(
+        name="CLR", init=init, step=step, converged=converged,
+        extract=lambda st: st["color"], weighted=False, max_iters=max_iters,
+    )

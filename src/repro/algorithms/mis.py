@@ -1,0 +1,53 @@
+"""Maximal Independent Set (MIS, Luby) — Table III: static, symmetric
+control, symmetric information.  Two edge phases per round: (a) min active
+neighbor priority, (b) broadcast of freshly selected vertices.
+Status: 0 = undecided, 1 = in MIS, 2 = removed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex_program import MAX, MIN, EdgePhase, VertexProgram
+
+__all__ = ["mis"]
+
+
+def mis(max_iters: int = 256) -> VertexProgram:
+    phase_min = EdgePhase(
+        monoid=MIN,
+        vprop=lambda st, src, w: st["priority"][src],
+        spred=lambda st, src: st["status"][src] == 0,
+        tpred=lambda st, dst: st["status"][dst] == 0,
+    )
+    phase_mark = EdgePhase(
+        monoid=MAX,
+        vprop=lambda st, src, w: jnp.ones_like(src, jnp.float32),
+        spred=lambda st, src: st["status"][src] == 1,
+        tpred=lambda st, dst: st["status"][dst] == 0,
+    )
+
+    def init(graph, key=None):
+        key = key if key is not None else jax.random.key(0)
+        v = graph.n_nodes
+        # unique priorities -> deterministic, tie-free selection
+        priority = jax.random.permutation(key, v).astype(jnp.float32)
+        return {"status": jnp.zeros((v,), jnp.int32), "priority": priority}
+
+    def step(ctx, st, it):
+        min_nbr = ctx.propagate(st, phase_min)
+        select = (st["status"] == 0) & (st["priority"] < min_nbr)
+        st1 = {**st, "status": jnp.where(select, 1, st["status"])}
+        marked = ctx.propagate(st1, phase_mark)
+        status = jnp.where((st1["status"] == 0) & (marked > 0), 2,
+                           st1["status"])
+        return {**st1, "status": status}
+
+    def converged(prev, cur):
+        return ~jnp.any(cur["status"] == 0)
+
+    return VertexProgram(
+        name="MIS", init=init, step=step, converged=converged,
+        extract=lambda st: st["status"] == 1, weighted=False,
+        max_iters=max_iters,
+    )

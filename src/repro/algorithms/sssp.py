@@ -1,0 +1,39 @@
+"""Single-Source Shortest Path (SSSP) — Table III: static, source control
+(push elides all non-frontier sources in the outer loop), source info.
+Frontier-based Bellman-Ford relaxation with a min monoid.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.vertex_program import MIN, EdgePhase, VertexProgram
+
+__all__ = ["sssp"]
+
+
+def sssp(source: int = 0, max_iters: int = 4096) -> VertexProgram:
+    phase = EdgePhase(
+        monoid=MIN,
+        vprop=lambda st, src, w: st["dist"][src] + w,
+        spred=lambda st, src: st["active"][src],  # frontier only
+    )
+
+    def init(graph, key=None):
+        v = graph.n_nodes
+        dist = jnp.full((v,), jnp.inf, jnp.float32).at[source].set(0.0)
+        active = jnp.zeros((v,), bool).at[source].set(True)
+        return {"dist": dist, "active": active}
+
+    def step(ctx, st, it):
+        cand = ctx.propagate(st, phase)
+        dist = jnp.minimum(st["dist"], cand)
+        active = dist < st["dist"]
+        return {"dist": dist, "active": active}
+
+    def converged(prev, cur):
+        return ~jnp.any(cur["active"])
+
+    return VertexProgram(
+        name="SSSP", init=init, step=step, converged=converged,
+        extract=lambda st: st["dist"], weighted=True, max_iters=max_iters,
+    )

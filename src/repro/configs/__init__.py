@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCH_NAMES, get_arch
+
+__all__ = ["ARCH_NAMES", "get_arch"]

@@ -1,0 +1,473 @@
+"""Arch/shape registry: every assigned architecture exposes, per input
+shape, (abstract params, abstract inputs, step_fn, shardings) — the exact
+contract the multi-pod dry-run lowers and compiles.
+
+Families: lm (dense GQA), moe, gnn (mgn/schnet/pna/equiformer), recsys.
+Axis conventions (launch/mesh.py): single-pod ("data", "model") = (16, 16);
+multi-pod ("pod", "data", "model") = (2, 16, 16).  FSDP shards over
+data(+pod), TP over model, EP over model (qwen3) or TP-in-expert (grok),
+SP shards long KV caches / carries over model(+data for batch=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["Axes", "Cell", "Arch", "axes_for_mesh"]
+
+F32, BF16, I32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    dp: tuple          # batch/FSDP axes
+    tp: str            # tensor/expert axis
+    all_axes: tuple    # every mesh axis (flat sharding for graph data)
+    dp_size: int = 1   # product of dp axis sizes (MoE dispatch groups)
+
+
+def axes_for_mesh(mesh) -> Axes:
+    names = mesh.axis_names
+    if "pod" in names:
+        return Axes(dp=("pod", "data"), tp="model",
+                    all_axes=("pod", "data", "model"),
+                    dp_size=mesh.shape["pod"] * mesh.shape["data"])
+    return Axes(dp=("data",), tp="model", all_axes=("data", "model"),
+                dp_size=mesh.shape["data"])
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x input-shape) dry-run unit."""
+    shape_name: str
+    kind: str                         # train | prefill | decode | serve
+    #: () -> pytree of ShapeDtypeStruct for the step's data inputs
+    input_specs: Callable[[], Any]
+    #: (axes) -> pytree of PartitionSpec matching input_specs
+    input_sharding: Callable[[Axes], Any]
+    #: (params, [opt_state,] *inputs) -> outputs; closed over model config
+    step: Callable[..., Any]
+    needs_opt: bool = False
+    donate: tuple = ()                # donated argnums for jit
+
+
+@dataclasses.dataclass
+class Arch:
+    name: str
+    family: str
+    cfg: Any
+    reduced_cfg: Any
+    #: () -> abstract params (ShapeDtypeStruct pytree)
+    abstract_params: Callable[[], Any]
+    #: (key, cfg) -> concrete params (used with reduced_cfg in smoke tests)
+    init_params: Callable[..., Any]
+    #: (axes) -> PartitionSpec pytree matching params
+    param_sharding: Callable[[Axes], Any]
+    cells: "dict[str, Cell]"
+    #: cfg-bound with mesh axes injected (lm/moe need axis names in-config)
+    bind_axes: Optional[Callable[[Any, Axes], Any]] = None
+
+    def cell(self, shape_name: str) -> Cell:
+        return self.cells[shape_name]
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+def replicate_like(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def opt_sharding_like(param_spec):
+    """AdamW state sharding mirrors the parameters."""
+    return {"mu": jax.tree.map(lambda s: s, param_spec),
+            "nu": jax.tree.map(lambda s: s, param_spec),
+            "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+def lm_param_sharding(cfg, ax: Axes, moe_mode: Optional[str] = None):
+    dp, tp = ax.dp, ax.tp
+    dense = lambda spec: {"w": spec} if not cfg.use_bias else None
+    attn = {
+        "wq": {"w": P(None, dp, tp)},
+        "wk": {"w": P(None, dp, tp)},
+        "wv": {"w": P(None, dp, tp)},
+        "wo": {"w": P(None, tp, dp)},
+    }
+    if cfg.use_bias:
+        for k in ("wq", "wk", "wv"):
+            attn[k]["b"] = P(None, tp)
+        attn["wo"]["b"] = P(None, None)
+    block = {"ln1": {"scale": P(None, None)}, "attn": attn}
+    if moe_mode is None:
+        mlp = {"up": {"w": P(None, dp, tp)}, "down": {"w": P(None, tp, dp)}}
+        if cfg.act in ("swiglu", "geglu"):
+            mlp["gate"] = {"w": P(None, dp, tp)}
+        if cfg.use_bias:
+            mlp["up"]["b"] = P(None, tp)
+            mlp["down"]["b"] = P(None, None)
+            if "gate" in mlp:
+                mlp["gate"]["b"] = P(None, tp)
+        block["mlp"] = mlp
+        if not cfg.parallel_block:
+            block["ln2"] = {"scale": P(None, None)}
+    else:
+        # MoE experts: 'ep' shards the expert axis over tp; 'tp' keeps
+        # experts replicated and shards d_ff over tp (few-expert models).
+        if moe_mode == "ep":
+            espec = P(None, tp, dp, None)
+            dspec = P(None, tp, None, dp)
+        else:
+            espec = P(None, None, dp, tp)
+            dspec = P(None, None, tp, dp)
+        moe = {"router": P(None, dp, None), "up": espec, "down": dspec}
+        if cfg.act in ("swiglu", "geglu"):
+            moe["gate"] = espec
+        block["moe"] = moe
+        block["ln2"] = {"scale": P(None, None)}
+    return {
+        "embed": P(tp, dp),
+        "blocks": block,
+        "final_norm": {"scale": P(None)},   # unstacked: rank 1
+    }
+
+
+def lm_train_cell(cfg, shape_name, batch, seq, train_fwd,
+                  microbatches: int = 1) -> Cell:
+    def specs():
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), I32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), I32)}
+
+    def sharding(ax: Axes):
+        return {"tokens": P(ax.dp, None), "labels": P(ax.dp, None)}
+
+    opt_cfg = AdamWConfig()
+
+    def step(params, opt_state, batch_in):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: train_fwd(cfg, p, batch_in))(params)
+        else:
+            # gradient accumulation (§Perf A3): activation/residual memory
+            # scales with batch/microbatches while FLOPs and per-token
+            # collective volume are unchanged.
+            mb = {k: v.reshape(microbatches, batch // microbatches, seq)
+                  for k, v in batch_in.items()}
+
+            def micro(carry, b):
+                l, g = jax.value_and_grad(
+                    lambda p: train_fwd(cfg, p, b))(params)
+                return (carry[0] + l,
+                        jax.tree.map(lambda a, gg: a + gg.astype(a.dtype),
+                                     carry[1], g)), None
+
+            # fp32 accumulators (bf16 grads summed across microbatches
+            # would lose low bits)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss_sum, grads), _ = jax.lax.scan(micro,
+                                                (jnp.float32(0), zeros), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_p, new_o, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+    return Cell(shape_name=shape_name, kind="train", input_specs=specs,
+                input_sharding=sharding, step=step, needs_opt=True,
+                donate=(0, 1))
+
+
+def lm_prefill_cell(cfg, shape_name, batch, seq, prefill_fn) -> Cell:
+    def specs():
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), I32)}
+
+    def sharding(ax: Axes):
+        return {"tokens": P(ax.dp, None)}
+
+    def step(params, batch_in):
+        return prefill_fn(cfg, params, batch_in["tokens"])
+
+    return Cell(shape_name=shape_name, kind="prefill", input_specs=specs,
+                input_sharding=sharding, step=step)
+
+
+def lm_decode_cell(cfg, shape_name, batch, kv_seq, decode_fn) -> Cell:
+    cache_shape = (cfg.n_layers, batch, cfg.n_kv_heads, kv_seq, cfg.d_head)
+
+    def specs():
+        return {
+            "token": jax.ShapeDtypeStruct((batch, 1), I32),
+            "k_cache": jax.ShapeDtypeStruct(cache_shape, BF16),
+            "v_cache": jax.ShapeDtypeStruct(cache_shape, BF16),
+            "kv_len": jax.ShapeDtypeStruct((), I32),
+        }
+
+    def sharding(ax: Axes):
+        if batch >= np.prod([1]) and batch > 1:
+            cspec = P(None, ax.dp, None, ax.tp, None)   # B over dp, S over tp
+            tspec = P(ax.dp, None)
+        else:  # batch=1 long-context: shard the sequence over everything
+            cspec = P(None, None, None, ax.all_axes, None)
+            tspec = P(None, None)
+        return {"token": tspec, "k_cache": cspec, "v_cache": cspec,
+                "kv_len": P()}
+
+    def step(params, batch_in):
+        return decode_fn(cfg, params, batch_in["token"],
+                         (batch_in["k_cache"], batch_in["v_cache"]),
+                         batch_in["kv_len"])
+
+    return Cell(shape_name=shape_name, kind="decode", input_specs=specs,
+                input_sharding=sharding, step=step, donate=())
+
+
+def make_lm_arch(name, cfg, reduced_cfg, *, moe_mode=None,
+                 axes: Optional[Axes] = None) -> Arch:
+    if axes is not None:
+        cfg = dataclasses.replace(cfg, dp_axes=tuple(axes.dp),
+                                  tp_axis=axes.tp, sp_axis=axes.tp)
+        if moe_mode is not None:
+            cfg = dataclasses.replace(cfg, moe_mode=moe_mode,
+                                      dispatch_groups=axes.dp_size)
+    if moe_mode is None:
+        from repro.models.transformer import (abstract_lm_params, decode_step,
+                                              init_lm, prefill, train_forward)
+        init, abstract = init_lm, abstract_lm_params
+        train_fwd, decode_fn = train_forward, decode_step
+        prefill_fn = prefill
+    else:
+        from repro.models.moe import (abstract_moe_params, init_moe_lm,
+                                      moe_decode_step, moe_prefill,
+                                      moe_train_forward)
+        init, abstract = init_moe_lm, abstract_moe_params
+        train_fwd, decode_fn = moe_train_forward, moe_decode_step
+        prefill_fn = moe_prefill
+
+    cells = {
+        "train_4k": lm_train_cell(cfg, "train_4k", 256, 4096, train_fwd,
+                                  microbatches=8),
+        "decode_32k": lm_decode_cell(cfg, "decode_32k", 128, 32768,
+                                     decode_fn),
+        "long_500k": lm_decode_cell(cfg, "long_500k", 1, 524288, decode_fn),
+    }
+    cells["prefill_32k"] = lm_prefill_cell(cfg, "prefill_32k", 32, 32768,
+                                           prefill_fn)
+
+    return Arch(
+        name=name, family="moe" if moe_mode else "lm",
+        cfg=cfg, reduced_cfg=reduced_cfg,
+        abstract_params=lambda: abstract(cfg),
+        init_params=init,
+        param_sharding=lambda ax: lm_param_sharding(cfg, ax, moe_mode),
+        cells=cells,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+def _pad512(n: int) -> int:
+    """Graph tensors are padded up to the 512-device multiple (the input
+    pipeline emits sentinel-masked pad nodes/edges — standard practice;
+    worst case +13% on full_graph_sm)."""
+    return -(-n // 512) * 512
+
+
+#: the 4 assigned shapes: (n_nodes, n_edges, d_feat, n_graphs)
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=_pad512(2708), n_edges=_pad512(10556),
+                          d_feat=1433, n_graphs=1, kind="train"),
+    "minibatch_lg": dict(n_nodes=_pad512(1024 * (1 + 10 + 150)),
+                         n_edges=_pad512(1024 * 10 + 1024 * 150),
+                         d_feat=602, n_graphs=1, kind="train"),
+    "ogb_products": dict(n_nodes=_pad512(2449029), n_edges=_pad512(61859140),
+                         d_feat=100, n_graphs=1, kind="train"),
+    "molecule": dict(n_nodes=_pad512(30 * 128), n_edges=_pad512(64 * 128 * 2),
+                     d_feat=0, n_graphs=128, kind="train"),
+}
+
+
+def gnn_input_specs(model_kind: str, dims) -> Callable[[], Any]:
+    n, e, f, g = (dims["n_nodes"], dims["n_edges"], dims["d_feat"],
+                  dims["n_graphs"])
+
+    def specs():
+        base = {"src": jax.ShapeDtypeStruct((e,), I32),
+                "dst": jax.ShapeDtypeStruct((e,), I32)}
+        if model_kind in ("schnet", "equiformer"):
+            base.update({
+                "species": jax.ShapeDtypeStruct((n,), I32),
+                "positions": jax.ShapeDtypeStruct((n, 3), F32),
+                "graph_ids": jax.ShapeDtypeStruct((n,), I32),
+                "energy": jax.ShapeDtypeStruct((g,), F32),
+            })
+        elif model_kind == "mgn":
+            base.update({
+                "node_feat": jax.ShapeDtypeStruct((n, max(f, 12)), F32),
+                "edge_feat": jax.ShapeDtypeStruct((e, 4), F32),
+                "target": jax.ShapeDtypeStruct((n, 3), F32),
+            })
+        else:  # pna
+            base.update({
+                "node_feat": jax.ShapeDtypeStruct((n, max(f, 16)), F32),
+                "in_degree": jax.ShapeDtypeStruct((n,), I32),
+                "labels": jax.ShapeDtypeStruct((n,), I32),
+            })
+        return base
+
+    return specs
+
+
+def gnn_input_sharding(model_kind: str):
+    def sharding(ax: Axes):
+        flat = ax.all_axes
+        base = {"src": P(flat), "dst": P(flat)}
+        if model_kind in ("schnet", "equiformer"):
+            base.update({"species": P(flat), "positions": P(flat, None),
+                         "graph_ids": P(flat), "energy": P(None)})
+        elif model_kind == "mgn":
+            base.update({"node_feat": P(flat, None),
+                         "edge_feat": P(flat, None),
+                         "target": P(flat, None)})
+        else:
+            base.update({"node_feat": P(flat, None), "in_degree": P(flat),
+                         "labels": P(flat)})
+        return base
+
+    return sharding
+
+
+def make_gnn_arch(name, model_kind, cfg_builder, init_fn, loss_fn,
+                  reduced_cfg) -> Arch:
+    """cfg_builder(dims) -> shape-specialised model config."""
+    opt_cfg = AdamWConfig(lr=1e-3)
+    cells = {}
+    cfg0 = cfg_builder(GNN_SHAPES["molecule"]
+                       if model_kind in ("schnet", "equiformer")
+                       else GNN_SHAPES["full_graph_sm"])
+
+    for shape_name, dims in GNN_SHAPES.items():
+        cfg = cfg_builder(dims)
+
+        def step(params, opt_state, batch_in, cfg=cfg):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch_in))(params)
+            new_p, new_o, gnorm = adamw_update(grads, opt_state, params,
+                                               opt_cfg)
+            return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+        cells[shape_name] = Cell(
+            shape_name=shape_name, kind="train",
+            input_specs=gnn_input_specs(model_kind, dims),
+            input_sharding=gnn_input_sharding(model_kind),
+            step=step, needs_opt=True, donate=(0, 1),
+        )
+
+    # NB: GNN params are small -> replicated; per-shape configs share the
+    # same param structure except input-dim dependent encoders, so
+    # abstract_params must be built per shape at dry-run time.
+    def abstract_for(shape_name):
+        cfg = cfg_builder(GNN_SHAPES[shape_name])
+        return jax.eval_shape(lambda: init_fn(jax.random.key(0), cfg))
+
+    arch = Arch(
+        name=name, family="gnn", cfg=cfg0, reduced_cfg=reduced_cfg,
+        abstract_params=lambda: abstract_for("full_graph_sm"),
+        init_params=init_fn,
+        param_sharding=lambda ax: None,  # computed from abstract (replicated)
+        cells=cells,
+    )
+    arch.abstract_params_for = abstract_for  # per-shape variant
+    return arch
+
+
+# ---------------------------------------------------------------------------
+# RecSys family (DLRM)
+# ---------------------------------------------------------------------------
+def make_dlrm_arch(name, cfg, reduced_cfg) -> Arch:
+    from repro.models.dlrm import (dlrm_forward, dlrm_loss, init_dlrm,
+                                   retrieval_score)
+    opt_cfg = AdamWConfig(lr=1e-3)
+
+    def specs_for(batch, retrieval=False):
+        def specs():
+            base = {
+                "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense), F32),
+                "sparse": jax.ShapeDtypeStruct(
+                    (batch, cfg.n_sparse, cfg.multi_hot), I32),
+            }
+            if retrieval:
+                base["cand"] = jax.ShapeDtypeStruct(
+                    (_pad512(1_000_000), cfg.embed_dim), F32)
+            else:
+                base["label"] = jax.ShapeDtypeStruct((batch,), I32)
+            return base
+        return specs
+
+    def sharding_for(batch, retrieval=False):
+        def sharding(ax: Axes):
+            dp = ax.dp if batch > 1 else None
+            base = {"dense": P(dp, None), "sparse": P(dp, None, None)}
+            if retrieval:
+                base["cand"] = P(ax.all_axes, None)
+            else:
+                base["label"] = P(dp)
+            return base
+        return sharding
+
+    def train_step(params, opt_state, batch_in):
+        loss, grads = jax.value_and_grad(
+            lambda p: dlrm_loss(cfg, p, batch_in))(params)
+        new_p, new_o, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+    def serve_step(params, batch_in):
+        return dlrm_forward(cfg, params, batch_in)
+
+    def retrieval_step(params, batch_in):
+        return retrieval_score(cfg, params, batch_in)
+
+    cells = {
+        "train_batch": Cell("train_batch", "train", specs_for(65536),
+                            sharding_for(65536), train_step, needs_opt=True,
+                            donate=(0, 1)),
+        "serve_p99": Cell("serve_p99", "serve", specs_for(512),
+                          sharding_for(512), serve_step),
+        "serve_bulk": Cell("serve_bulk", "serve", specs_for(262144),
+                           sharding_for(262144), serve_step),
+        "retrieval_cand": Cell("retrieval_cand", "serve",
+                               specs_for(1, retrieval=True),
+                               sharding_for(1, retrieval=True),
+                               retrieval_step),
+    }
+
+    def param_sharding(ax: Axes):
+        # row-shard big tables over tp; tiny tables replicated
+        tables = [P(ax.tp, None) if v >= 4096 else P(None, None)
+                  for v in cfg.vocab_sizes]
+        rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+        import jax as _jax
+        abstract = _jax.eval_shape(
+            lambda: init_dlrm(_jax.random.key(0), cfg))
+        return {"tables": tables, "bot": rep(abstract["bot"]),
+                "top": rep(abstract["top"])}
+
+    return Arch(
+        name=name, family="recsys", cfg=cfg, reduced_cfg=reduced_cfg,
+        abstract_params=lambda: jax.eval_shape(
+            lambda: init_dlrm(jax.random.key(0), cfg)),
+        init_params=init_dlrm,
+        param_sharding=param_sharding,
+        cells=cells,
+    )

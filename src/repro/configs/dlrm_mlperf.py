@@ -1,0 +1,17 @@
+"""dlrm-mlperf [arXiv:1906.00091]: MLPerf DLRM (Criteo 1TB): 13 dense,
+26 sparse, dim 128, bot 512-256-128, top 1024-1024-512-256-1, dot
+interaction."""
+import dataclasses
+
+from repro.configs.base import make_dlrm_arch
+from repro.models.dlrm import DLRMConfig
+
+CFG = DLRMConfig()
+
+REDUCED = DLRMConfig(vocab_sizes=(1000, 200, 50, 300, 77, 10),
+                     embed_dim=16, bot_mlp=(64, 32, 16),
+                     top_mlp=(64, 32, 1))
+
+
+def arch(axes=None):  # axes unused: params replicated / no axis names in cfg
+    return make_dlrm_arch("dlrm-mlperf", CFG, REDUCED)

@@ -1,0 +1,20 @@
+"""equiformer-v2 [arXiv:2306.12059]: 12 layers, hidden 128, l_max=6,
+m_max=2, 8 heads, SO(2)/eSCN convolutions."""
+from repro.configs.base import make_gnn_arch
+from repro.models.gnn.equiformer_v2 import (EquiformerV2Config,
+                                            equiformer_loss,
+                                            init_equiformer)
+
+
+def _builder(dims):
+    return EquiformerV2Config(n_layers=12, d_hidden=128, l_max=6, m_max=2,
+                              n_heads=8, n_graphs=dims["n_graphs"])
+
+
+REDUCED = EquiformerV2Config(n_layers=2, d_hidden=16, l_max=3, m_max=2,
+                             n_heads=4, n_rbf=16, n_graphs=4)
+
+
+def arch(axes=None):  # axes unused: params replicated / no axis names in cfg
+    return make_gnn_arch("equiformer-v2", "equiformer", _builder,
+                         init_equiformer, equiformer_loss, REDUCED)

@@ -1,0 +1,20 @@
+"""meshgraphnet [arXiv:2010.03409]: 15 message-passing layers, hidden 128,
+sum aggregation, 2-layer MLPs."""
+import dataclasses
+
+from repro.configs.base import make_gnn_arch
+from repro.models.gnn.meshgraphnet import MGNConfig, init_mgn, mgn_loss
+
+
+def _builder(dims):
+    return MGNConfig(n_layers=15, d_hidden=128, mlp_layers=2,
+                     d_node_in=max(dims["d_feat"], 12), d_edge_in=4, d_out=3)
+
+
+REDUCED = MGNConfig(n_layers=2, d_hidden=32, mlp_layers=2, d_node_in=12,
+                    d_edge_in=4, d_out=3)
+
+
+def arch(axes=None):  # axes unused: params replicated / no axis names in cfg
+    return make_gnn_arch("meshgraphnet", "mgn", _builder, init_mgn,
+                         mgn_loss, REDUCED)

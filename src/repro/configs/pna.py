@@ -1,0 +1,20 @@
+"""pna [arXiv:2004.05718]: 4 layers, hidden 75, aggregators
+mean/max/min/std, scalers id/amplification/attenuation."""
+from repro.configs.base import make_gnn_arch
+from repro.models.gnn.pna import PNAConfig, init_pna, pna_loss
+
+_CLASSES = {"full_graph_sm": 7, "ogb_products": 47}
+
+
+def _builder(dims):
+    n_cls = 47 if dims["n_nodes"] > 1_000_000 else \
+        (7 if dims["d_feat"] == 1433 else 16)
+    return PNAConfig(n_layers=4, d_hidden=75, d_in=max(dims["d_feat"], 16),
+                     n_classes=n_cls)
+
+
+REDUCED = PNAConfig(n_layers=2, d_hidden=25, d_in=16, n_classes=5)
+
+
+def arch(axes=None):  # axes unused: params replicated / no axis names in cfg
+    return make_gnn_arch("pna", "pna", _builder, init_pna, pna_loss, REDUCED)

@@ -1,0 +1,29 @@
+"""--arch lookup: one module per assigned architecture."""
+from __future__ import annotations
+
+import importlib
+from functools import lru_cache
+
+_MODULES = {
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "schnet": "repro.configs.schnet",
+    "pna": "repro.configs.pna",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+@lru_cache(maxsize=None)
+def get_arch(name: str, axes=None):
+    """axes: optional configs.base.Axes — binds mesh axis names into the
+    model config (sharding constraints) for distributed lowering."""
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; one of {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[name]).arch(axes=axes)

@@ -1,0 +1,17 @@
+"""schnet [arXiv:1706.08566]: 3 interactions, hidden 64, 300 RBFs,
+cutoff 10 A."""
+from repro.configs.base import make_gnn_arch
+from repro.models.gnn.schnet import SchNetConfig, init_schnet, schnet_loss
+
+
+def _builder(dims):
+    return SchNetConfig(n_interactions=3, d_hidden=64, n_rbf=300,
+                        cutoff=10.0, n_graphs=dims["n_graphs"])
+
+
+REDUCED = SchNetConfig(n_interactions=2, d_hidden=32, n_rbf=50, n_graphs=4)
+
+
+def arch(axes=None):  # axes unused: params replicated / no axis names in cfg
+    return make_gnn_arch("schnet", "schnet", _builder, init_schnet,
+                         schnet_loss, REDUCED)

@@ -1,0 +1,54 @@
+"""Coherence dimension: where the scatter-reduction resolves (DESIGN.md §2).
+
+- :func:`segment_reduce` — the **LLC / GPU-coherence analogue**: one global
+  reduction into the full HBM-resident vertex array (XLA scatter/segment op;
+  on GPU this was "atomics execute at the L2").
+- :func:`segment_reduce_owned` — the **DeNovo analogue**: edges arrive
+  pre-binned by target block (``Graph.perm_owned``); updates to one
+  VMEM-resident block are accumulated locally and written back once
+  ("ownership registration at L1, atomics at L1").  On TPU this is the
+  Pallas ``segment_reduce`` kernel; the pure-jnp path reduces over the
+  binned order (block-major scatter locality) and is the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex_program import Monoid
+
+__all__ = ["segment_reduce", "segment_reduce_owned"]
+
+_SEGMENT_OPS = {
+    "sum": jax.ops.segment_sum,
+    "min": jax.ops.segment_min,
+    "max": jax.ops.segment_max,
+}
+
+
+def segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                   num_segments: int, monoid: Monoid,
+                   indices_are_sorted: bool = False) -> jnp.ndarray:
+    """Monoid-dispatched segment reduction (LLC-resolved accumulation).
+
+    ``indices_are_sorted=True`` is the pull path: by-dst edge order makes
+    the reduction a dense segmented scan — the "non-atomic" local update of
+    the paper.  Unsorted ids are the push path ("atomics").
+    """
+    op = _SEGMENT_OPS[monoid.name]
+    return op(values, segment_ids, num_segments=num_segments,
+              indices_are_sorted=indices_are_sorted)
+
+
+def segment_reduce_owned(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                         num_segments: int, monoid: Monoid) -> jnp.ndarray:
+    """Owned (DeNovo-analogue) accumulation, pure-jnp realisation.
+
+    Callers pass edges already permuted into target-block-binned order;
+    XLA reduces over the binned order (block-major scatter locality).  The
+    TPU realisation is the Pallas blocked kernel
+    (:class:`repro.kernels.segment_reduce.BlockedSegmentReducer`), wired up
+    by :class:`repro.core.executor.EdgeContext` when ``use_pallas=True``.
+    """
+    return segment_reduce(values, segment_ids, num_segments, monoid,
+                          indices_are_sorted=False)

@@ -1,0 +1,81 @@
+"""The paper's 3-axis system design space (Table I), as executable config.
+
+Naming follows the paper's Fig. 5 labels: ``<dir><coh><cons>`` where
+direction T = Target-outer (pull), S = Source-outer (push), D = Dynamic
+(push+pull); coherence G = GPU-analogue (LLC/HBM-resolved accumulation),
+D = DeNovo-analogue (owned/VMEM-block accumulation); consistency
+0 = DRF0 (barriered), 1 = DRF1 (ordered chunk overlap), R = DRFrlx
+(reorderable partial reductions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+
+__all__ = ["UpdateProp", "Coherence", "Consistency", "SystemConfig",
+           "ALL_CONFIGS", "STATIC_CONFIGS", "DYNAMIC_CONFIGS"]
+
+
+class UpdateProp(enum.Enum):
+    PULL = "T"        # target in outer loop; sparse remote reads
+    PUSH = "S"        # source in outer loop; sparse remote updates
+    PUSH_PULL = "D"   # dynamic traversal; racy reads and updates
+
+
+class Coherence(enum.Enum):
+    #: GPU coherence: atomics at LLC, L1 self-invalidate/write-through.
+    #: TPU analogue: one global HBM-resolved scatter/segment reduction.
+    GPU = "G"
+    #: DeNovo: ownership at L1, local atomics, update reuse.
+    #: TPU analogue: target-block-owned VMEM accumulation, write back once.
+    DENOVO = "D"
+
+
+class Consistency(enum.Enum):
+    #: SC for DRF; every phase fully barriered.
+    DRF0 = "0"
+    #: unpaired sync may overlap data: ordered chunk pipeline.
+    DRF1 = "1"
+    #: relaxed atomics reorder w.r.t. each other: independent partial
+    #: reductions in flight (MLP analogue).
+    DRFRLX = "R"
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    prop: UpdateProp
+    coherence: Coherence
+    consistency: Consistency
+    #: edge chunks used by the DRF1/DRFrlx schedules (1 => DRF0-equivalent).
+    n_chunks: int = 8
+
+    @property
+    def name(self) -> str:
+        return f"{self.prop.value}{self.coherence.value}{self.consistency.value}"
+
+    @classmethod
+    def from_name(cls, name: str, n_chunks: int = 8) -> "SystemConfig":
+        prop = {u.value: u for u in UpdateProp}[name[0]]
+        coh = {c.value: c for c in Coherence}[name[1]]
+        cons = {c.value: c for c in Consistency}[name[2]]
+        return cls(prop, coh, cons, n_chunks=n_chunks)
+
+    def __str__(self) -> str:  # pragma: no cover
+        return self.name
+
+
+def _configs(props):
+    return tuple(
+        SystemConfig(p, c, m)
+        for p, c, m in itertools.product(props, Coherence, Consistency)
+    )
+
+
+#: All 12 configurations of the full design space (paper Sec. I).
+ALL_CONFIGS = _configs(UpdateProp)
+#: The 12 static-traversal configs are (pull|push) x coh x cons; pull does
+#: not use fine-grained atomics so its coherence/consistency variants
+#: coincide (paper shows only TG0) - we keep them addressable regardless.
+STATIC_CONFIGS = _configs([UpdateProp.PULL, UpdateProp.PUSH])
+DYNAMIC_CONFIGS = _configs([UpdateProp.PUSH_PULL])

@@ -1,0 +1,198 @@
+"""Graph-structure taxonomy: Volume, Reuse, Imbalance (paper Sec. III-A).
+
+Implements Equations 1-7 plus the paper's empirically chosen thresholds
+(Sec. V-A) for H/M/L classification.  Two hardware profiles are provided:
+
+- ``PAPER_GPU``: the simulated GPU of Table IV (15 SMs, 32 KB L1, 4 MB L2,
+  |TB| = 256).  Used for the paper-faithfulness tests: with the published
+  |V|, |E| the Volume classes of Table II reproduce exactly.
+- ``TPU_V5E``: the deployment profile.  The unit of scheduling locality is
+  the per-core vertex tile (Pallas target block); "L1" is VMEM and "L2/SM"
+  is the per-core HBM working-set budget.  Classes drive the same decision
+  tree; only thresholds differ (DESIGN.md Sec. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.structure import Graph
+
+__all__ = ["HwProfile", "PAPER_GPU", "TPU_V5E", "GraphProfile",
+           "volume_kb", "reuse", "imbalance", "classify", "profile_graph",
+           "classify_volume_kb"]
+
+BYTES_PER_ELEMENT = 4  # one fp32/int32 property word per vertex + per edge
+
+
+@dataclasses.dataclass(frozen=True)
+class HwProfile:
+    name: str
+    n_cores: int            # |SM| in Eq. 1
+    l1_bytes: int           # per-core fast memory
+    l2_bytes: int           # shared capacity
+    tb_size: int            # |TB| in Eqs. 2-7 (vertex tile size)
+    # classification thresholds (Sec. V-A)
+    vol_low_factor: float = 1.5     # low: < 1.5 x L1
+    reuse_low: float = 0.15
+    reuse_high: float = 0.40
+    imb_low: float = 0.05
+    imb_high: float = 0.25
+    kmeans_threshold: float = 10.0  # max-degree centroid differential
+
+    @property
+    def vol_low_kb(self) -> float:
+        return self.vol_low_factor * self.l1_bytes / 1024.0
+
+    @property
+    def vol_high_kb(self) -> float:
+        return self.l2_bytes / self.n_cores / 1024.0
+
+
+#: Table IV simulated hardware.
+PAPER_GPU = HwProfile(name="paper_gpu", n_cores=15, l1_bytes=32 * 1024,
+                      l2_bytes=4 * 1024 * 1024, tb_size=256)
+
+#: TPU v5e-ish deployment profile: 1 TensorCore per chip; VMEM ~128 MB
+#: plays the L1 role; treat a 16 MB per-core HBM hot-set budget as the
+#: "shared" capacity knee (beyond it, expect streaming behaviour).
+TPU_V5E = HwProfile(name="tpu_v5e", n_cores=1, l1_bytes=128 * 1024 * 1024,
+                    l2_bytes=16 * 1024 * 1024 * 1024, tb_size=1024)
+
+
+# --------------------------------------------------------------------------
+# Eq. 1 - Volume
+# --------------------------------------------------------------------------
+def volume_kb(n_nodes: int, n_edges: int, hw: HwProfile = PAPER_GPU) -> float:
+    """Eq. 1 scaled to KB: average working set per core."""
+    return (n_nodes + n_edges) * BYTES_PER_ELEMENT / hw.n_cores / 1024.0
+
+
+def classify_volume_kb(kb: float, hw: HwProfile = PAPER_GPU) -> str:
+    if kb < hw.vol_low_kb:
+        return "L"
+    if kb > hw.vol_high_kb:
+        return "H"
+    return "M"
+
+
+# --------------------------------------------------------------------------
+# Eqs. 2-6 - Reuse
+# --------------------------------------------------------------------------
+def an_local_remote(g: Graph, tb_size: int) -> tuple[float, float]:
+    """AN_L (Eq. 4) and AN_R (Eq. 5): average local/remote neighbors,
+    where local means same thread block / vertex tile (Eqs. 2-3)."""
+    src = np.asarray(g.src, dtype=np.int64)
+    dst = np.asarray(g.dst, dtype=np.int64)
+    same = (src // tb_size) == (dst // tb_size)
+    non_self = src != dst  # self edges contribute 0 to both (Eqs. 2-3)
+    an_l = float(np.count_nonzero(same & non_self)) / g.n_nodes
+    an_r = float(np.count_nonzero(~same & non_self)) / g.n_nodes
+    return an_l, an_r
+
+
+def reuse_from_an(an_l: float, an_r: float, avg_degree: float) -> float:
+    """Eq. 6."""
+    if avg_degree == 0:
+        return 0.0
+    return 0.5 * (1.0 + (an_l - an_r) / avg_degree)
+
+
+def reuse(g: Graph, hw: HwProfile = PAPER_GPU) -> float:
+    an_l, an_r = an_local_remote(g, hw.tb_size)
+    avg_degree = g.n_edges / max(g.n_nodes, 1)
+    return reuse_from_an(an_l, an_r, avg_degree)
+
+
+def classify_reuse(r: float, hw: HwProfile = PAPER_GPU) -> str:
+    if r < hw.reuse_low:
+        return "L"
+    if r > hw.reuse_high:
+        return "H"
+    return "M"
+
+
+# --------------------------------------------------------------------------
+# Eq. 7 - Imbalance (k-means over per-warp max degree)
+# --------------------------------------------------------------------------
+WARP_SIZE = 32
+
+
+def _kmeans2(values: np.ndarray, iters: int = 16) -> tuple[float, float]:
+    """Tiny fixed-k (k=2) 1-D k-means; returns the two centroids."""
+    lo, hi = float(values.min()), float(values.max())
+    if lo == hi:
+        return lo, hi
+    c0, c1 = lo, hi
+    for _ in range(iters):
+        mid = (c0 + c1) / 2.0
+        left = values[values <= mid]
+        right = values[values > mid]
+        n0 = c0 if left.size == 0 else float(left.mean())
+        n1 = c1 if right.size == 0 else float(right.mean())
+        if n0 == c0 and n1 == c1:
+            break
+        c0, c1 = n0, n1
+    return c0, c1
+
+
+def imbalance(g: Graph, hw: HwProfile = PAPER_GPU) -> float:
+    """Eq. 7: fraction of thread blocks marked imbalanced, where a block is
+    marked if 2-means clustering of its warps' max degree yields centroids
+    separated by more than the threshold (Sec. III-A3, V-A)."""
+    deg = np.asarray(g.out_degree, dtype=np.float64)
+    tb, warp = hw.tb_size, WARP_SIZE
+    n_blocks = int(np.ceil(g.n_nodes / tb))
+    pad = n_blocks * tb - g.n_nodes
+    if pad:
+        deg = np.concatenate([deg, np.zeros(pad)])
+    # [n_blocks, warps_per_block]: max degree processed by each warp
+    warp_max = deg.reshape(n_blocks, tb // warp, warp).max(axis=2)
+    marked = 0
+    for b in range(n_blocks):
+        c0, c1 = _kmeans2(warp_max[b])
+        if (c1 - c0) > hw.kmeans_threshold:
+            marked += 1
+    return marked / max(n_blocks, 1)
+
+
+def classify_imbalance(i: float, hw: HwProfile = PAPER_GPU) -> str:
+    if i < hw.imb_low:
+        return "L"
+    if i > hw.imb_high:
+        return "H"
+    return "M"
+
+
+# --------------------------------------------------------------------------
+# Combined profile
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GraphProfile:
+    """Taxonomy inputs to the specialization model (Sec. IV)."""
+    volume_kb: float
+    reuse: float
+    imbalance: float
+    volume_class: str
+    reuse_class: str
+    imbalance_class: str
+
+    @classmethod
+    def from_classes(cls, vol: str, reu: str, imb: str) -> "GraphProfile":
+        return cls(float("nan"), float("nan"), float("nan"), vol, reu, imb)
+
+
+def classify(vol_kb: float, r: float, i: float,
+             hw: HwProfile = PAPER_GPU) -> GraphProfile:
+    return GraphProfile(
+        volume_kb=vol_kb, reuse=r, imbalance=i,
+        volume_class=classify_volume_kb(vol_kb, hw),
+        reuse_class=classify_reuse(r, hw),
+        imbalance_class=classify_imbalance(i, hw),
+    )
+
+
+def profile_graph(g: Graph, hw: HwProfile = PAPER_GPU) -> GraphProfile:
+    return classify(volume_kb(g.n_nodes, g.n_edges, hw), reuse(g, hw),
+                    imbalance(g, hw), hw)

@@ -1,0 +1,85 @@
+"""Vertex-centric program abstraction (paper Fig. 1, typed).
+
+A ``VertexProgram`` is written against the :class:`EdgeContext` API
+(``ctx.propagate``) which hides the system configuration: update direction
+(push/pull), coherence (LLC vs owned accumulation) and consistency schedule
+(DRF0/DRF1/DRFrlx).  This is the paper's contract: the *algorithm* supplies
+``spred``/``tpred`` (algorithmic control), ``vprop`` (algorithmic
+information) and the reduction monoid ``op``; the *system* decides how
+edge-propagated updates execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.core.properties import TABLE_III, AlgorithmicProperties
+
+__all__ = ["Monoid", "SUM", "MIN", "MAX", "EdgePhase", "VertexProgram"]
+
+State = dict  # str -> jnp.ndarray pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """Commutative-associative reduction: the paper's ``op``.
+
+    Commutativity+associativity is what lets DRFrlx reorder the update
+    stream (relaxed atomics) — and what lets us legally re-schedule the
+    reduction on TPU.
+    """
+    name: str  # 'sum' | 'min' | 'max'
+
+    def identity(self, dtype) -> Any:
+        dtype = jnp.dtype(dtype)
+        if self.name == "sum":
+            return jnp.zeros((), dtype)
+        big = (jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer)
+               else jnp.array(jnp.inf, dtype))
+        small = (jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer)
+                 else jnp.array(-jnp.inf, dtype))
+        return big if self.name == "min" else small
+
+    def combine(self, a, b):
+        if self.name == "sum":
+            return a + b
+        return jnp.minimum(a, b) if self.name == "min" else jnp.maximum(a, b)
+
+
+SUM = Monoid("sum")
+MIN = Monoid("min")
+MAX = Monoid("max")
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgePhase:
+    """One edge-propagated reduction (one kernel of Fig. 1).
+
+    ``vprop(state, src_ids, edge_weight) -> [E] values`` — algorithmic
+    information, reads *source-side* properties only (Fig. 1 line 4/8).
+    ``spred(state, src_ids)`` / ``tpred(state, dst_ids)`` — algorithmic
+    control.  Edges failing either predicate contribute the monoid
+    identity (work elision happens at trace level per direction).
+    """
+    monoid: Monoid
+    vprop: Callable[[State, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    spred: Optional[Callable[[State, jnp.ndarray], jnp.ndarray]] = None
+    tpred: Optional[Callable[[State, jnp.ndarray], jnp.ndarray]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """A graph algorithm: state init, per-iteration step, convergence."""
+    name: str
+    init: Callable[..., State]                     # (graph[, key]) -> state
+    step: Callable[..., State]                     # (ctx, state, it) -> state
+    converged: Callable[[State, State], jnp.ndarray]  # (prev, cur) -> bool
+    extract: Callable[[State], Any]
+    weighted: bool = False
+    max_iters: int = 1024
+
+    @property
+    def properties(self) -> AlgorithmicProperties:
+        return TABLE_III[self.name]

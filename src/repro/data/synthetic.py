@@ -1,0 +1,41 @@
+"""Synthetic data sources for every family (offline container: no real
+corpora).  Deterministic per (seed, step) — restart-safe by construction:
+the pipeline can replay any step after an elastic restart."""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["lm_batch", "gnn_batch", "dlrm_batch"]
+
+
+def lm_batch(step: int, batch: int, seq: int, vocab: int, seed: int = 0):
+    rng = np.random.default_rng((seed, step))
+    # zipf-ish marginals so the loss curve is non-trivial
+    tok = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64) % vocab
+    return {"tokens": tok[:, :-1].astype(np.int32),
+            "labels": tok[:, 1:].astype(np.int32)}
+
+
+def gnn_batch(step: int, graph, d_feat: int, n_classes: int, seed: int = 0):
+    rng = np.random.default_rng((seed, step))
+    n = graph.n_nodes
+    return {
+        "node_feat": rng.standard_normal((n, d_feat)).astype(np.float32),
+        "src": np.asarray(graph.src, np.int32),
+        "dst": np.asarray(graph.dst, np.int32),
+        "in_degree": np.asarray(graph.in_degree, np.int32),
+        "labels": rng.integers(0, n_classes, n).astype(np.int32),
+    }
+
+
+def dlrm_batch(step: int, batch: int, vocab_sizes, multi_hot: int = 1,
+               seed: int = 0):
+    rng = np.random.default_rng((seed, step))
+    sparse = np.stack(
+        [rng.integers(0, v, (batch, multi_hot)) for v in vocab_sizes],
+        axis=1).astype(np.int32)
+    return {
+        "dense": rng.standard_normal((batch, 13)).astype(np.float32),
+        "sparse": sparse,
+        "label": rng.integers(0, 2, batch).astype(np.int32),
+    }

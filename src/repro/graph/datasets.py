@@ -1,0 +1,95 @@
+"""The paper's six graph inputs (Table II), recreated synthetically.
+
+Published statistics (Table II of the paper):
+
+| Graph | Vertices | Edges   | MaxDeg | AvgDeg | Volume(KB) | Reuse     | Imbal.   |
+|-------|----------|---------|--------|--------|------------|-----------|----------|
+| AMZ   | 410236   | 6713648 | 2770   | 16.265 | 1855 (H)   | 0.160 (M) | 0.00 (L) |
+| DCT   | 52652    | 178076  | 38     | 3.382  | 60 (M)     | 0.359 (M) | 0.08 (M) |
+| EML   | 265214   | 837912  | 7636   | 3.159  | 287 (H)    | 0.053 (L) | 1.00 (H) |
+| OLS   | 88263    | 683186  | 10     | 7.740  | 201 (M)    | 0.445 (H) | 0.00 (L) |
+| RAJ   | 20640    | 163178  | 3469   | 7.906  | 48 (L)     | 0.594 (H) | 0.62 (H) |
+| WNG   | 61032    | 243088  | 4      | 3.919  | 79 (M)     | ~0.005(L) | 0.00 (L) |
+
+(Note: Table II prints WNG's Reuse as "0.594" but classifies it L; Eq. 6
+with AN_L=0.020, AN_R=3.899, avg-deg 3.919 gives 0.0051 -> the printed value
+is a typesetting duplication of RAJ's; we reproduce the class, L.)
+
+``paper_graph(name)`` materialises a synthetic graph whose generator knobs
+were tuned so the taxonomy classification (H/M/L for Volume/Reuse/Imbalance)
+matches Table II.  ``paper_graph(name, scale=k)`` divides vertex/edge counts
+by ``k`` for CPU-friendly benchmarks while preserving Reuse/Imbalance classes
+(Volume is recomputed from the true reduced size, so benchmark tables always
+report the classification actually measured).
+
+``PAPER_STATS`` carries the published numbers for metric-faithfulness tests
+that must be independent of synthesis (Volume classification is a pure
+function of |V|, |E|).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+from repro.graph.generators import powerlaw_graph, regular_graph
+from repro.graph.structure import Graph
+
+__all__ = ["PAPER_GRAPHS", "PAPER_STATS", "paper_graph"]
+
+PAPER_GRAPHS = ("AMZ", "DCT", "EML", "OLS", "RAJ", "WNG")
+
+# name -> (vertices, edges, max_deg, avg_deg, volume_kb, reuse, imbalance,
+#          vol_class, reuse_class, imb_class) from Table II.
+PAPER_STATS = {
+    "AMZ": (410236, 6713648, 2770, 16.265, 1855.178, 0.160, 0.000, "H", "M", "L"),
+    "DCT": (52652, 178076, 38, 3.382, 60.078, 0.359, 0.083, "M", "M", "M"),
+    "EML": (265214, 837912, 7636, 3.159, 287.272, 0.053, 1.000, "H", "L", "H"),
+    "OLS": (88263, 683186, 10, 7.740, 200.898, 0.445, 0.000, "M", "H", "L"),
+    "RAJ": (20640, 163178, 3469, 7.906, 47.869, 0.594, 0.617, "L", "H", "H"),
+    "WNG": (61032, 243088, 4, 3.919, 79.458, 0.0051, 0.000, "M", "L", "L"),
+}
+
+# Published AN_L / AN_R (Table II) for Reuse-metric regression tests.
+PAPER_AN = {
+    "AMZ": (2.616, 13.749),
+    "DCT": (1.215, 2.167),
+    "EML": (0.167, 2.992),
+    "OLS": (3.446, 4.295),
+    "RAJ": (4.697, 3.209),
+    "WNG": (0.020, 3.899),
+}
+
+
+@lru_cache(maxsize=None)
+def paper_graph(name: str, scale: int = 1, weighted: bool = False,
+                block_size: int = 256) -> Graph:
+    """Synthetic recreation of a Table II input (optionally scaled down)."""
+    if name not in PAPER_STATS:
+        raise KeyError(f"unknown paper graph {name!r}; one of {PAPER_GRAPHS}")
+    v, e, max_deg, avg_deg = PAPER_STATS[name][:4]
+    n = max(4 * block_size, v // scale)
+    ne = max(n * 2, e // scale)
+    seed = hash(name) % (2**31)
+    if name == "AMZ":      # skewed but degree-ordered ids -> warp maxes
+        # homogeneous within each tile -> Imbalance L (like the real input)
+        return powerlaw_graph(n, ne // 2, alpha=1.2, max_degree=max_deg,
+                              locality=0.21, degree_order="sorted", seed=seed,
+                              weighted=weighted, block_size=block_size)
+    if name == "DCT":      # light skew, moderate locality, mild imbalance
+        return powerlaw_graph(n, ne // 2, alpha=0.7, max_degree=max_deg,
+                              locality=0.31, hub_fraction=0.12, seed=seed,
+                              weighted=weighted, block_size=block_size)
+    if name == "EML":      # heavy power law, low locality, hubs everywhere
+        return powerlaw_graph(n, ne // 2, alpha=1.6, max_degree=max_deg,
+                              locality=0.05, hub_fraction=1.0, seed=seed,
+                              weighted=weighted, block_size=block_size)
+    if name == "OLS":      # near-regular, high locality
+        return regular_graph(n, degree=max(2, int(avg_deg / 2)), locality=0.56,
+                             seed=seed, weighted=weighted,
+                             block_size=block_size)
+    if name == "RAJ":      # small, skewed, high locality
+        return powerlaw_graph(n, ne // 2, alpha=1.1, max_degree=max_deg,
+                              locality=0.62, hub_fraction=0.7, seed=seed,
+                              weighted=weighted, block_size=block_size)
+    # WNG: degree ~4, almost perfectly regular, no locality
+    return regular_graph(n, degree=2, locality=0.005, seed=seed,
+                         weighted=weighted, block_size=block_size)

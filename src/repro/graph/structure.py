@@ -1,0 +1,175 @@
+"""Graph container for push/pull vertex-centric execution.
+
+The paper's design space needs *both* edge orderings of the same graph:
+
+- **by-src (CSR) order** — push: iterating edges grouped by source gives the
+  paper's "dense local reads" of source properties and "sparse remote
+  atomics" to targets (here: an unsorted scatter-reduction over ``dst``).
+- **by-dst (CSC) order** — pull: iterating edges grouped by target gives
+  "sparse remote reads" of sources and "dense local updates" (a segmented
+  reduction over already-sorted ``dst`` — the non-atomic path).
+
+For the DeNovo-analogue ("owned") accumulation we additionally keep a
+permutation of the by-src order that bins edges by *target block* of
+``block_size`` vertices: all updates to one VMEM-resident block are grouped
+so a kernel can accumulate them locally ("ownership") and write back once.
+``block_size`` plays the role of the paper's thread-block size |TB| in the
+Reuse/Imbalance metrics (Eqs. 2-7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Graph", "graph_stats", "GraphStats"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Directed (symmetric, per the paper's input format) graph.
+
+    All arrays may be numpy (host) or jax (device); construction is numpy.
+    """
+
+    # --- by-src (CSR / push) order -------------------------------------
+    src: jax.Array          # [E] int32, non-decreasing
+    dst: jax.Array          # [E] int32
+    weight: jax.Array       # [E] float32
+    row_ptr_out: jax.Array  # [V+1] int32
+    # --- by-dst (CSC / pull) order -------------------------------------
+    src_in: jax.Array       # [E] int32
+    dst_in: jax.Array       # [E] int32, non-decreasing
+    weight_in: jax.Array    # [E] float32
+    row_ptr_in: jax.Array   # [V+1] int32
+    # --- degrees --------------------------------------------------------
+    out_degree: jax.Array   # [V] int32
+    in_degree: jax.Array    # [V] int32
+    # --- owned (DeNovo-analogue) target-block binned by-src order -------
+    perm_owned: jax.Array   # [E] int32: indices into by-src arrays
+    block_ptr: jax.Array    # [n_blocks+1] int32: edge offsets per dst block
+    # --- static metadata -------------------------------------------------
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+    block_size: int = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return (self.n_nodes + self.block_size - 1) // self.block_size
+
+    @classmethod
+    def from_coo(
+        cls,
+        src,
+        dst,
+        n_nodes: int,
+        weight=None,
+        block_size: int = 256,
+        symmetrize: bool = False,
+        remove_self_loops: bool = True,
+    ) -> "Graph":
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if weight is None:
+            weight = np.ones(src.shape[0], dtype=np.float32)
+        weight = np.asarray(weight, dtype=np.float32)
+
+        if symmetrize:
+            src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+            weight = np.concatenate([weight, weight])
+        if remove_self_loops:
+            keep = src != dst
+            src, dst, weight = src[keep], dst[keep], weight[keep]
+        # de-duplicate (keep min weight — matches SSSP semantics, harmless
+        # for unweighted graphs where all weights coincide)
+        key = src * n_nodes + dst
+        order = np.lexsort((weight, key))
+        key_s = key[order]
+        first = np.ones(key_s.shape[0], dtype=bool)
+        first[1:] = key_s[1:] != key_s[:-1]
+        order = order[first]
+        src, dst, weight = src[order], dst[order], weight[order]
+
+        e = src.shape[0]
+        # by-src order (the lexsort above already sorted by src-major key)
+        perm_src = np.lexsort((dst, src))
+        s_src, d_src, w_src = src[perm_src], dst[perm_src], weight[perm_src]
+        row_ptr_out = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.add.at(row_ptr_out, s_src + 1, 1)
+        row_ptr_out = np.cumsum(row_ptr_out)
+        # by-dst order
+        perm_dst = np.lexsort((src, dst))
+        s_dst, d_dst, w_dst = src[perm_dst], dst[perm_dst], weight[perm_dst]
+        row_ptr_in = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.add.at(row_ptr_in, d_dst + 1, 1)
+        row_ptr_in = np.cumsum(row_ptr_in)
+
+        out_degree = np.diff(row_ptr_out)
+        in_degree = np.diff(row_ptr_in)
+
+        # owned order: stable-sort by dst block, preserving by-src order
+        # inside each block (keeps push's dense source reads).
+        n_blocks = (n_nodes + block_size - 1) // block_size
+        blk = d_src // block_size
+        perm_owned = np.argsort(blk, kind="stable")
+        block_ptr = np.zeros(n_blocks + 1, dtype=np.int64)
+        np.add.at(block_ptr, blk + 1, 1)
+        block_ptr = np.cumsum(block_ptr)
+
+        i32 = lambda a: np.asarray(a, dtype=np.int32)
+        return cls(
+            src=i32(s_src), dst=i32(d_src), weight=np.float32(w_src),
+            row_ptr_out=i32(row_ptr_out),
+            src_in=i32(s_dst), dst_in=i32(d_dst), weight_in=np.float32(w_dst),
+            row_ptr_in=i32(row_ptr_in),
+            out_degree=i32(out_degree), in_degree=i32(in_degree),
+            perm_owned=i32(perm_owned), block_ptr=i32(block_ptr),
+            n_nodes=int(n_nodes), n_edges=int(e), block_size=int(block_size),
+        )
+
+    def device_put(self) -> "Graph":
+        arrays = {
+            f.name: jnp.asarray(getattr(self, f.name))
+            for f in dataclasses.fields(self)
+            if not f.metadata.get("static", False)
+        }
+        return dataclasses.replace(self, **arrays)
+
+    # Convenience views -------------------------------------------------
+    def edges_owned(self):
+        """Edges permuted into target-block-binned order (numpy or jax)."""
+        take = jnp.take if isinstance(self.src, jax.Array) else (
+            lambda a, i: np.asarray(a)[np.asarray(i)]
+        )
+        return (take(self.src, self.perm_owned),
+                take(self.dst, self.perm_owned),
+                take(self.weight, self.perm_owned))
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    n_nodes: int
+    n_edges: int
+    max_degree: int
+    avg_degree: float
+    std_degree: float
+
+    @cached_property
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def graph_stats(g: Graph) -> GraphStats:
+    deg = np.asarray(g.out_degree)
+    return GraphStats(
+        n_nodes=g.n_nodes,
+        n_edges=g.n_edges,
+        max_degree=int(deg.max()) if deg.size else 0,
+        avg_degree=float(deg.mean()) if deg.size else 0.0,
+        std_degree=float(deg.std()) if deg.size else 0.0,
+    )

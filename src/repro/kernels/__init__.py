@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper), ref.py (pure-jnp oracle).  Validated in interpret mode
+on CPU (tests/test_kernels.py); interpret=False targets TPU Mosaic.
+"""

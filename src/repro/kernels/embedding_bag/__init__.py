@@ -1,0 +1,5 @@
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag_pallas", "embedding_bag", "embedding_bag_ref"]

@@ -1,0 +1,87 @@
+"""Embedding-bag gather+pool — Pallas TPU.
+
+The table stays in HBM (``memory_space=ANY``); bag indices are scalar-
+prefetched (available before the body runs, so row DMAs can be issued
+immediately); each grid step pools one tile of bags.  Rows stream
+HBM->VMEM via explicit async copies — the TPU analogue of the FBGEMM
+table-batched-embedding hot loop, and exactly the memory pattern DLRM's
+roofline is dominated by.
+
+All P row copies of a bag tile are issued before any is awaited (DMA
+pipelining inside the step); cross-step pipelining via double buffering is
+a recorded perf iteration (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_bag_pallas"]
+
+
+def _embag_kernel(idx_ref, table_ref, out_ref, rows_scr, sem, *,
+                  bags_per_step: int, pool: int, mode: str):
+    step = pl.program_id(0)
+
+    def copy(b, p):
+        gid = step * bags_per_step + b
+        return pltpu.make_async_copy(
+            table_ref.at[pl.ds(idx_ref[gid, p], 1), :],
+            rows_scr.at[pl.ds(b * pool + p, 1), :],
+            sem.at[b * pool + p],
+        )
+
+    # issue every row DMA first, then await: in-step pipelining
+    for b in range(bags_per_step):
+        for p in range(pool):
+            copy(b, p).start()
+    for b in range(bags_per_step):
+        for p in range(pool):
+            copy(b, p).wait()
+
+    rows = rows_scr[...].reshape(bags_per_step, pool, -1)
+    pooled = rows.sum(axis=1)
+    if mode == "mean":
+        pooled = pooled / pool
+    out_ref[...] = pooled.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bags_per_step",
+                                             "interpret"))
+def embedding_bag_pallas(table: jnp.ndarray, indices: jnp.ndarray, *,
+                         mode: str = "sum", bags_per_step: int = 8,
+                         interpret: bool = True) -> jnp.ndarray:
+    """table [R, D]; indices [B, P] int32 -> [B, D]."""
+    r, d = table.shape
+    bsz, pool = indices.shape
+    bags_per_step = min(bags_per_step, bsz)
+    n_steps = -(-bsz // bags_per_step)
+    pad = n_steps * bags_per_step - bsz
+    if pad:
+        indices = jnp.concatenate(
+            [indices, jnp.zeros((pad, pool), indices.dtype)])
+
+    kernel = functools.partial(_embag_kernel, bags_per_step=bags_per_step,
+                               pool=pool, mode=mode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_steps,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],  # table in HBM
+        out_specs=pl.BlockSpec((bags_per_step, d), lambda i, idx: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bags_per_step * pool, d), table.dtype),
+            pltpu.SemaphoreType.DMA((bags_per_step * pool,)),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_steps * bags_per_step, d),
+                                       table.dtype),
+        interpret=interpret,
+    )(indices, table)
+    return out[:bsz]

@@ -1,0 +1,18 @@
+"""Public embedding-bag op with impl switch (pallas kernel / XLA gather)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag"]
+
+
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray, *,
+                  mode: str = "sum", impl: str = "xla",
+                  interpret: bool = True) -> jnp.ndarray:
+    if impl == "pallas":
+        return embedding_bag_pallas(table, indices, mode=mode,
+                                    interpret=interpret)
+    return embedding_bag_ref(table, indices, mode=mode)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for embedding-bag (JAX has no native EmbeddingBag —
+gather + reduce IS the implementation contract, kernel_taxonomy §RecSys)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_ref"]
+
+
+def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray,
+                      mode: str = "sum") -> jnp.ndarray:
+    """table [R, D]; indices [B, P] -> [B, D] pooled over P."""
+    rows = jnp.take(table, indices, axis=0)        # [B, P, D]
+    if mode == "sum":
+        return rows.sum(axis=1)
+    if mode == "mean":
+        return rows.mean(axis=1)
+    raise ValueError(mode)

@@ -1,0 +1,6 @@
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import attention, decode_attention
+from repro.kernels.flash_attention.ref import decode_ref, gqa_ref, mha_ref
+
+__all__ = ["flash_attention", "attention", "decode_attention",
+           "mha_ref", "gqa_ref", "decode_ref"]

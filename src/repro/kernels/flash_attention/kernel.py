@@ -1,0 +1,104 @@
+"""Flash attention forward (GQA + causal), Pallas TPU.
+
+Standard IO-aware blocked softmax: grid (batch, q_head, q_tiles, k_tiles)
+with the k axis innermost; VMEM scratch carries the running max ``m``,
+normaliser ``l`` and un-normalised accumulator across k steps; the output
+tile is written once at the last visited k tile (hence O(Sq*D) VMEM per
+(b,h,q) and no S*S materialisation).  Causal q tiles skip fully-masked k
+tiles via the grid index map (they are still visited but masked cheaply;
+full skipping is a documented perf iteration).
+
+GQA is expressed in the k/v index maps: kv head = q head // group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, scale: float, bq: int, bk: int, n_k: int,
+                  seq_off: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                # [bq, d]
+    k = k_ref[0, 0]                                # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        # query rows are offset by (Sk - Sq) when q is a suffix of k
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + seq_off
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # [bq, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                         # [bq, bk]
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_scr[...] = m_cur
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [B,Hq,Sq,D], k/v [B,Hkv,Sk,D], Hq % Hkv == 0 -> [B,Hq,Sq,D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    n_q = -(-sq // bq)
+    n_k = -(-sk // bk)
+    scale = 1.0 / (d ** 0.5)
+    seq_off = sk - sq  # causal offset when decoding a suffix
+
+    kernel = functools.partial(_flash_kernel, causal=causal, scale=scale,
+                               bq=bq, bk=bk, n_k=n_k, seq_off=seq_off)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""Public attention ops: TPU Pallas kernel or XLA reference, one switch.
+
+``attention(..., impl='pallas'|'xla')`` — models call this; the dry-run
+lowers with impl='xla' (the kernel is validated separately in interpret
+mode; on real TPU hardware impl='pallas' with interpret=False is the fast
+path).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import decode_ref, gqa_ref
+
+__all__ = ["attention", "decode_attention"]
+
+
+def attention(q, k, v, *, causal: bool = True, impl: str = "xla",
+              interpret: bool = True) -> jnp.ndarray:
+    """GQA attention; q [B,Hq,S,D], k/v [B,Hkv,S,D]."""
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, interpret=interpret)
+    return gqa_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len) -> jnp.ndarray:
+    """One-token decode against a (possibly over-allocated) KV cache."""
+    return decode_ref(q, k_cache, v_cache, kv_len)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for flash attention (GQA, causal or full)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["mha_ref", "gqa_ref", "decode_ref"]
+
+
+def mha_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q [B,H,Sq,D], k/v [B,H,Sk,D] -> [B,H,Sq,D] (fp32 softmax)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        ki = jnp.arange(sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)
+
+
+def gqa_ref(q, k, v, causal: bool = True):
+    """q [B,Hq,Sq,D], k/v [B,Hkv,Sk,D] with Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    return mha_ref(q, kx, vx, causal=causal)
+
+
+def decode_ref(q, k, v, kv_len, window=None):
+    """Single-token decode: q [B,Hq,1,D] against cache k/v [B,Hkv,S,D];
+    positions >= kv_len are masked (cache may be over-allocated);
+    ``window`` additionally masks positions < kv_len - window (sliding-
+    window models).  GQA via a grouped einsum — no k/v repeat."""
+    b, hkv, s, d = k.shape
+    hq = q.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, q.shape[2], d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    pos = jnp.arange(s)[None, None, None, None, :]
+    mask = pos < kv_len
+    if window is not None:
+        mask &= pos >= kv_len - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(q.dtype), v)
+    return out.reshape(b, hq, q.shape[2], d)

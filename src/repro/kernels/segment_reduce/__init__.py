@@ -1,0 +1,7 @@
+from repro.kernels.segment_reduce.ops import BlockedSegmentReducer
+from repro.kernels.segment_reduce.ref import (segment_max_ref,
+                                              segment_min_ref,
+                                              segment_sum_ref)
+
+__all__ = ["BlockedSegmentReducer", "segment_sum_ref", "segment_min_ref",
+           "segment_max_ref"]

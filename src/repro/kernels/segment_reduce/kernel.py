@@ -1,0 +1,170 @@
+"""Blocked segment reduction — the DeNovo-coherence analogue on TPU.
+
+The target-vertex range is tiled into blocks of ``block_size`` segments;
+edges arrive binned by target block (``Graph.perm_owned`` order).  Each
+output block is "owned" in VMEM across the consecutive grid steps that feed
+it ("ownership registration at L1"), accumulated locally, and written back
+to HBM exactly once — versus the LLC-analogue global XLA scatter that
+resolves every update at HBM.
+
+Sum uses the canonical TPU trick: scatter-within-block == one-hot matmul on
+the MXU (contrib = onehot(local_ids)^T @ values).  Min/max use a masked
+VPU reduce over a feature tile.
+
+Grid: one step per edge tile; ``tile_block_id`` (scalar-prefetched) steers
+the output BlockSpec so Pallas keeps the same VMEM block resident across
+consecutive tiles of one block. ``tile_first`` zeroes the accumulator when
+a new block begins.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["seg_sum_pallas", "seg_minmax_pallas", "plan_tiles"]
+
+
+def plan_tiles(block_ptr: np.ndarray, tile_e: int):
+    """Host-side tiling plan over block-binned edges.
+
+    Returns (gather_idx [n_tiles, tile_e] int32 into the binned edge order,
+    -1 = padding; tile_block_id [n_tiles]; tile_first [n_tiles]).  Every
+    output block gets at least one tile so it is always initialised.
+    """
+    block_ptr = np.asarray(block_ptr, np.int64)
+    n_blocks = block_ptr.shape[0] - 1
+    gather, tbid, tfirst = [], [], []
+    for b in range(n_blocks):
+        lo, hi = block_ptr[b], block_ptr[b + 1]
+        n = int(hi - lo)
+        n_tiles = max(1, -(-n // tile_e))
+        idx = np.full(n_tiles * tile_e, -1, np.int64)
+        idx[:n] = np.arange(lo, hi)
+        for t in range(n_tiles):
+            gather.append(idx[t * tile_e:(t + 1) * tile_e])
+            tbid.append(b)
+            tfirst.append(1 if t == 0 else 0)
+    return (np.stack(gather).astype(np.int32),
+            np.asarray(tbid, np.int32), np.asarray(tfirst, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# sum kernel (MXU one-hot matmul)
+# ---------------------------------------------------------------------------
+def _sum_kernel(tbid_ref, tfirst_ref, lid_ref, vals_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(tfirst_ref[i] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lids = lid_ref[0, :]                       # [tile_e] local ids, -1 pad
+    vals = vals_ref[0]                         # [tile_e, D]
+    tile_e = lids.shape[0]
+    block = out_ref.shape[0]
+    onehot = (lids[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tile_e, block), 1)).astype(vals.dtype)
+    contrib = jax.lax.dot_general(
+        onehot, vals,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # onehot^T @ vals
+        preferred_element_type=jnp.float32)
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "num_out_blocks",
+                                             "interpret"))
+def seg_sum_pallas(vals_tiled: jnp.ndarray,   # [n_tiles, tile_e, D]
+                   lids_tiled: jnp.ndarray,   # [n_tiles, tile_e]
+                   tile_block_id: jnp.ndarray,
+                   tile_first: jnp.ndarray,
+                   *, block_size: int, num_out_blocks: int,
+                   interpret: bool = True) -> jnp.ndarray:
+    n_tiles, tile_e, d = vals_tiled.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile_e), lambda i, tbid, tfirst: (i, 0)),
+            pl.BlockSpec((1, tile_e, d), lambda i, tbid, tfirst: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_size, d),
+                               lambda i, tbid, tfirst: (tbid[i], 0)),
+    )
+
+    return pl.pallas_call(
+        _sum_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_out_blocks * block_size, d),
+                                       vals_tiled.dtype),
+        interpret=interpret,
+    )(tile_block_id, tile_first, lids_tiled, vals_tiled)
+
+
+# ---------------------------------------------------------------------------
+# min/max kernel (masked VPU reduce, feature-tiled)
+# ---------------------------------------------------------------------------
+def _minmax_kernel(tbid_ref, tfirst_ref, lid_ref, vals_ref, out_ref, *,
+                   is_min: bool, ident):
+    i = pl.program_id(1)  # edge-tile index (innermost: consecutive revisits)
+
+    @pl.when(tfirst_ref[i] == 1)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    lids = lid_ref[0, :]
+    vals = vals_ref[0]                          # [tile_e, bd]
+    tile_e = lids.shape[0]
+    block = out_ref.shape[0]
+    onehot = lids[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tile_e, block), 1)
+    masked = jnp.where(onehot[:, :, None], vals[:, None, :], ident)
+    red = masked.min(axis=0) if is_min else masked.max(axis=0)
+    cur = out_ref[...]
+    out_ref[...] = jnp.minimum(cur, red) if is_min else jnp.maximum(cur, red)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "num_out_blocks",
+                                             "is_min", "interpret", "bd"))
+def seg_minmax_pallas(vals_tiled, lids_tiled, tile_block_id, tile_first, *,
+                      block_size: int, num_out_blocks: int, is_min: bool,
+                      bd: int = 8, interpret: bool = True) -> jnp.ndarray:
+    n_tiles, tile_e, d = vals_tiled.shape
+    n_d = -(-d // bd)
+    if n_d * bd != d:
+        pad = n_d * bd - d
+        vals_tiled = jnp.pad(vals_tiled, ((0, 0), (0, 0), (0, pad)))
+    dtype = vals_tiled.dtype
+    if jnp.issubdtype(dtype, jnp.floating):
+        ident = float("inf") if is_min else float("-inf")
+    else:
+        ident = int(jnp.iinfo(dtype).max if is_min else jnp.iinfo(dtype).min)
+
+    # feature tile j is OUTER, edge tile i INNER so revisits of one output
+    # block happen on consecutive grid steps (Pallas revisit contract).
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_d, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile_e), lambda j, i, tbid, tfirst: (i, 0)),
+            pl.BlockSpec((1, tile_e, bd),
+                         lambda j, i, tbid, tfirst: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_size, bd),
+                               lambda j, i, tbid, tfirst: (tbid[i], j)),
+    )
+
+    kernel = functools.partial(_minmax_kernel, is_min=is_min, ident=ident)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_out_blocks * block_size, n_d * bd),
+                                       dtype),
+        interpret=interpret,
+    )(tile_block_id, tile_first, lids_tiled, vals_tiled)
+    return out[:, :d]

@@ -1,0 +1,88 @@
+"""Jit-safe wrappers around the blocked segment-reduce kernels.
+
+The tiling plan depends only on the (static) binned segment ids, so it is
+built once on host (numpy) and the returned reducer is safe to call inside
+jit — values are gathered with a static index array at runtime.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.kernel import (plan_tiles, seg_minmax_pallas,
+                                                 seg_sum_pallas)
+
+__all__ = ["BlockedSegmentReducer"]
+
+
+class BlockedSegmentReducer:
+    """Plan once (host), reduce many times (device, inside jit).
+
+    ``segment_ids`` must arrive binned by target block (``Graph.perm_owned``
+    order) with ``block_ptr`` giving per-block edge offsets — exactly what
+    :class:`repro.graph.Graph` maintains.
+    """
+
+    def __init__(self, segment_ids: np.ndarray, block_ptr: np.ndarray,
+                 num_segments: int, block_size: int, tile_e: int = 512,
+                 interpret: bool = True):
+        ids = np.asarray(segment_ids, np.int64)
+        self.gather_idx, self.tile_block_id, self.tile_first = plan_tiles(
+            block_ptr, tile_e)
+        pad = self.gather_idx < 0
+        safe = np.where(pad, 0, self.gather_idx)
+        lids = ids[safe] - self.tile_block_id[:, None].astype(np.int64) \
+            * block_size
+        self.lids = jnp.asarray(np.where(pad, -1, lids).astype(np.int32))
+        self.gather = jnp.asarray(safe.astype(np.int32))
+        self.pad_mask = jnp.asarray(pad)
+        self.tbid = jnp.asarray(self.tile_block_id)
+        self.tfirst = jnp.asarray(self.tile_first)
+        self.num_segments = int(num_segments)
+        self.block_size = int(block_size)
+        self.num_out_blocks = -(-int(num_segments) // int(block_size))
+        self.interpret = bool(interpret)
+
+    def _tile_values(self, values: jnp.ndarray, fill) -> jnp.ndarray:
+        squeeze = values.ndim == 1
+        if squeeze:
+            values = values[:, None]
+        tiled = jnp.take(values, self.gather.reshape(-1), axis=0)
+        tiled = tiled.reshape(*self.gather.shape, values.shape[-1])
+        tiled = jnp.where(self.pad_mask[..., None], fill, tiled)
+        return tiled, squeeze
+
+    def sum(self, values: jnp.ndarray) -> jnp.ndarray:
+        tiled, squeeze = self._tile_values(values, 0)
+        out = seg_sum_pallas(tiled, self.lids, self.tbid, self.tfirst,
+                             block_size=self.block_size,
+                             num_out_blocks=self.num_out_blocks,
+                             interpret=self.interpret)
+        out = out[:self.num_segments]
+        return out[:, 0] if squeeze else out
+
+    def _minmax(self, values, is_min):
+        dtype = values.dtype
+        if jnp.issubdtype(dtype, jnp.floating):
+            # match jax.ops.segment_min/max: empty segments hold +/-inf
+            ident = float("inf") if is_min else float("-inf")
+        else:
+            ident = int(jnp.iinfo(dtype).max if is_min
+                        else jnp.iinfo(dtype).min)
+        tiled, squeeze = self._tile_values(values, ident)
+        out = seg_minmax_pallas(tiled, self.lids, self.tbid, self.tfirst,
+                                block_size=self.block_size,
+                                num_out_blocks=self.num_out_blocks,
+                                is_min=is_min, interpret=self.interpret)
+        out = out[:self.num_segments]
+        return out[:, 0] if squeeze else out
+
+    def min(self, values: jnp.ndarray) -> jnp.ndarray:
+        return self._minmax(values, True)
+
+    def max(self, values: jnp.ndarray) -> jnp.ndarray:
+        return self._minmax(values, False)
+
+    def reduce(self, values: jnp.ndarray, kind: str) -> jnp.ndarray:
+        return getattr(self, kind)(values)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the blocked segment reductions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_sum_ref", "segment_min_ref", "segment_max_ref"]
+
+
+def segment_sum_ref(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """values [E] or [E, D]; ids [E] int32 in [0, num_segments) (out-of-
+    range ids are dropped, matching the kernel's padding contract)."""
+    return jax.ops.segment_sum(values, segment_ids,
+                               num_segments=num_segments)
+
+
+def segment_min_ref(values, segment_ids, num_segments):
+    return jax.ops.segment_min(values, segment_ids,
+                               num_segments=num_segments)
+
+
+def segment_max_ref(values, segment_ids, num_segments):
+    return jax.ops.segment_max(values, segment_ids,
+                               num_segments=num_segments)

@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Perf-iteration driver (EXPERIMENTS.md §Perf): lower ONE cell and report
+# memory breakdown, cost, and the top collectives attributed to their HLO
+# computation (while-loop bodies flagged: XLA counts them once; scanned
+# models repeat them n_layers times).
+#
+#   PYTHONPATH=src python -m repro.launch.perf --arch command-r-plus-104b \
+#       --shape train_4k [--multi-pod] [--top 15]
+
+import argparse
+import collections
+import json
+import re
+
+from repro.launch.dryrun import DTYPE_BYTES, SHAPE_RE, run_cell, shape_bytes
+
+COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def split_computations(hlo: str):
+    """Yield (computation_name, body_text) blocks from HLO text."""
+    blocks = []
+    cur_name, cur = None, []
+    for line in hlo.splitlines():
+        m = re.match(r"^(%?[\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*(?:/\*.*)?$",
+                     line)
+        if m and ("{" in line) and ("=" not in line.split("{")[0]):
+            if cur_name is not None:
+                blocks.append((cur_name, "\n".join(cur)))
+            cur_name, cur = m.group(1), []
+        else:
+            cur.append(line)
+    if cur_name is not None:
+        blocks.append((cur_name, "\n".join(cur)))
+    return blocks
+
+
+def while_bodies(hlo: str):
+    """Names of computations used as while-loop bodies/conds."""
+    names = set()
+    for m in re.finditer(r"(body|condition)=%?([\w\.\-]+)", hlo):
+        names.add(m.group(2))
+    return names
+
+
+def top_collectives(hlo: str, top: int = 15):
+    bodies = while_bodies(hlo)
+    rows = []
+    for comp, text in split_computations(hlo):
+        in_loop = comp.lstrip("%") in bodies
+        for line in text.splitlines():
+            for kind in COLL_KINDS:
+                if re.search(rf"= [^=]*{kind}(-start)?\(", line):
+                    lhs = line.split("(")[0]
+                    b = shape_bytes(lhs)
+                    if b:
+                        rows.append({
+                            "kind": kind, "bytes": b, "comp": comp,
+                            "in_while_body": in_loop,
+                            "shape": SHAPE_RE.search(lhs).group(0)
+                            if SHAPE_RE.search(lhs) else "?",
+                        })
+                    break
+    rows.sort(key=lambda r: -r["bytes"])
+    agg = collections.Counter()
+    loop_agg = collections.Counter()
+    for r in rows:
+        agg[r["kind"]] += r["bytes"]
+        if r["in_while_body"]:
+            loop_agg[r["kind"]] += r["bytes"]
+    return rows[:top], dict(agg), dict(loop_agg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args()
+
+    import repro.launch.dryrun as dr
+    # capture the hlo text by re-running the cell with a hook
+    orig = dr.collective_stats
+    captured = {}
+
+    def hook(hlo):
+        captured["hlo"] = hlo
+        return orig(hlo)
+
+    dr.collective_stats = hook
+    res = run_cell(args.arch, args.shape, args.multi_pod, verbose=False)
+    dr.collective_stats = orig
+
+    print(json.dumps({k: v for k, v in res.items()
+                      if k in ("memory", "cost", "compile_s")}, indent=2))
+    hlo = captured.get("hlo", "")
+    if args.dump_hlo and hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(hlo)
+    rows, agg, loop_agg = top_collectives(hlo, args.top)
+    print("\n== collective totals (per device, while-bodies counted once)")
+    for k, v in sorted(agg.items(), key=lambda kv: -kv[1]):
+        inl = loop_agg.get(k, 0)
+        print(f"  {k:<20} {v/1e9:8.3f} GB   (of which in-scan: "
+              f"{inl/1e9:.3f} GB -> x n_layers at runtime)")
+    print("\n== top collectives")
+    for r in rows:
+        tag = "[SCAN]" if r["in_while_body"] else "      "
+        print(f"  {tag} {r['kind']:<18} {r['bytes']/1e9:8.3f} GB  "
+              f"{r['shape']}  in {r['comp'][:40]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""DLRM (MLPerf config, Criteo-1TB) [arXiv:1906.00091].
+
+13 dense features -> bottom MLP 512-256-128; 26 categorical features ->
+row-sharded embedding tables (dim 128) via embedding-bag (jnp.take +
+segment reduction — JAX has no native EmbeddingBag; the Pallas kernel is
+the TPU hot path); dot-product feature interaction over the 27 vectors;
+top MLP 1024-1024-512-256-1; BCE loss.
+
+``retrieval_score`` serves the retrieval_cand shape: one user against 1M
+candidate embeddings as a single batched dot (no loops).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.gnn.common import init_mlp_stack, mlp_stack
+
+__all__ = ["DLRMConfig", "CRITEO_1TB_VOCABS", "init_dlrm", "dlrm_forward",
+           "dlrm_loss", "retrieval_score"]
+
+#: MLPerc DLRM (Criteo Terabyte) per-feature vocabulary sizes.
+CRITEO_1TB_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771, 25641295,
+    39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocab_sizes: tuple[int, ...] = CRITEO_1TB_VOCABS
+    embed_dim: int = 128
+    bot_mlp: tuple[int, ...] = (512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    multi_hot: int = 1     # indices per feature (bag size)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def padded_vocab_sizes(self) -> tuple[int, ...]:
+        """Table allocation sizes: big (sharded) tables round up to the
+        512-row multiple so row-sharding divides on any mesh; lookups use
+        logical indices so padding rows are dead weight only."""
+        return tuple(-(-v // 512) * 512 if v >= 4096 else v
+                     for v in self.vocab_sizes)
+
+    @property
+    def n_embed_rows(self) -> int:
+        return sum(self.vocab_sizes)
+
+    @property
+    def n_params(self) -> int:
+        d = self.embed_dim
+        n = self.n_embed_rows * d
+        dims = (self.n_dense,) + self.bot_mlp
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1]
+                 for i in range(len(dims) - 1))
+        n_int = (self.n_sparse + 1) * self.n_sparse // 2 + d
+        tdims = (n_int,) + self.top_mlp
+        n += sum(tdims[i] * tdims[i + 1] + tdims[i + 1]
+                 for i in range(len(tdims) - 1))
+        return n
+
+
+def init_dlrm(key, cfg: DLRMConfig):
+    ks = jax.random.split(key, 3 + cfg.n_sparse)
+    d = cfg.embed_dim
+    tables = [
+        (jax.random.normal(ks[3 + i], (v, d), jnp.float32)
+         * (1.0 / jnp.sqrt(v))).astype(jnp.float32)
+        for i, v in enumerate(cfg.padded_vocab_sizes)
+    ]
+    n_int = (cfg.n_sparse + 1) * cfg.n_sparse // 2 + d
+    return {
+        "tables": tables,
+        "bot": init_mlp_stack(ks[0], (cfg.n_dense,) + cfg.bot_mlp),
+        "top": init_mlp_stack(ks[1], (n_int,) + cfg.top_mlp),
+    }
+
+
+def _interact(bottom: jnp.ndarray, embs: jnp.ndarray) -> jnp.ndarray:
+    """bottom [B,D]; embs [B,F,D] -> dot interaction + bottom passthrough."""
+    z = jnp.concatenate([bottom[:, None, :], embs], axis=1)   # [B, F+1, D]
+    gram = jnp.einsum("bfd,bgd->bfg", z, z,
+                      preferred_element_type=jnp.float32)
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    pairs = gram[:, iu, ju]                                   # [B, F(F-1)/2]
+    return jnp.concatenate([bottom, pairs], axis=-1)
+
+
+def dlrm_forward(cfg: DLRMConfig, params, batch, impl: str = "xla"):
+    """batch: dense [B, 13] f32; sparse [B, 26, multi_hot] int32."""
+    bottom = mlp_stack(params["bot"], batch["dense"], final_act=True)
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    embs = [
+        embedding_bag(params["tables"][i], batch["sparse"][:, i, :],
+                      mode="sum", impl=impl)
+        for i in range(cfg.n_sparse)
+    ]
+    embs = jnp.stack(embs, axis=1)                            # [B, 26, D]
+    x = _interact(bottom, embs)
+    logit = mlp_stack(params["top"], x)[:, 0]
+    return logit
+
+
+def dlrm_loss(cfg: DLRMConfig, params, batch, impl: str = "xla"):
+    logit = dlrm_forward(cfg, params, batch, impl=impl)
+    y = batch["label"].astype(jnp.float32)
+    z = logit.astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def retrieval_score(cfg: DLRMConfig, params, batch):
+    """One query scored against n_candidates item embeddings.
+
+    batch: dense [1, 13]; sparse [1, 26, multi_hot]; cand [N_c, D].
+    Returns [N_c] scores = <user tower output, candidate embedding>."""
+    bottom = mlp_stack(params["bot"], batch["dense"], final_act=True)  # [1,D]
+    return jnp.einsum("nd,bd->n", batch["cand"], bottom)

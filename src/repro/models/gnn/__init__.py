@@ -1,0 +1,9 @@
+from repro.models.gnn.common import aggregate, segment_softmax
+from repro.models.gnn.equiformer_v2 import (EquiformerV2Config,
+                                            equiformer_forward,
+                                            equiformer_loss, init_equiformer)
+from repro.models.gnn.meshgraphnet import (MGNConfig, init_mgn, mgn_forward,
+                                           mgn_loss)
+from repro.models.gnn.pna import PNAConfig, init_pna, pna_forward, pna_loss
+from repro.models.gnn.schnet import (SchNetConfig, init_schnet,
+                                     schnet_forward, schnet_loss)

@@ -1,0 +1,115 @@
+"""GNN substrate: message aggregation routed through the paper's design
+space + shared MLP helpers.
+
+``aggregate`` is the single scatter primitive every GNN model uses; the
+bound :class:`SystemConfig` picks:
+- coherence: LLC-analogue direct scatter vs owned-analogue sort-by-target-
+  block + reduce (paying "ownership registration" for block locality —
+  in-graph ``argsort`` since GNN edge sets are runtime inputs),
+- consistency: DRF0 monolithic / DRF1 ordered chunks / DRFrlx independent
+  partial reductions (see core.consistency).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coherence import segment_reduce
+from repro.core.config_space import (Coherence, Consistency, SystemConfig,
+                                     UpdateProp)
+from repro.core.consistency import scheduled_reduce
+from repro.core.vertex_program import MAX, MIN, SUM, Monoid
+from repro.models import layers as L
+
+__all__ = ["aggregate", "segment_softmax", "init_mlp_stack", "mlp_stack",
+           "DEFAULT_GNN_CONFIG"]
+
+#: push + GPU-coherence + DRFrlx — the paper's majority-optimal config is
+#: the default; models accept any SystemConfig.
+DEFAULT_GNN_CONFIG = SystemConfig(UpdateProp.PUSH, Coherence.GPU,
+                                  Consistency.DRFRLX)
+
+_MONOIDS = {"sum": SUM, "min": MIN, "max": MAX}
+
+
+def constrain_flat(x):
+    """Shard dim0 (nodes/edges) over every mesh axis when a mesh context
+    is active (dry-run / production); no-op on a single device.  Without
+    this, GSPMD replicates the [N, ...] node state per device —
+    catastrophic at ogb_products scale (§Perf C1)."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty or not am.axis_names:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(am.axis_names), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def aggregate(values: jnp.ndarray, dst: jnp.ndarray, n_nodes: int,
+              kind: str = "sum",
+              config: SystemConfig = DEFAULT_GNN_CONFIG,
+              block_size: int = 1024) -> jnp.ndarray:
+    """values [E, ...], dst [E] -> [n_nodes, ...] reduced by ``kind``."""
+    monoid = _MONOIDS[kind]
+    if config.coherence is Coherence.DENOVO:
+        order = jnp.argsort(dst // block_size)   # ownership registration
+        values = jnp.take(values, order, axis=0)
+        dst = jnp.take(dst, order, axis=0)
+    e = dst.shape[0]
+    n_chunks = 1 if config.consistency is Consistency.DRF0 \
+        else min(config.n_chunks, max(1, e // 1024))
+    ec = -(-e // n_chunks)
+    pad = n_chunks * ec - e
+    if pad:
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad,) + values.shape[1:], values.dtype)])
+        dst = jnp.concatenate([dst, jnp.full((pad,), n_nodes, dst.dtype)])
+    values = values.reshape((n_chunks, ec) + values.shape[1:])
+    dst = dst.reshape(n_chunks, ec)
+    ident = monoid.identity(values.dtype)
+
+    def chunk_reduce(i):
+        v = jax.lax.dynamic_index_in_dim(values, i, keepdims=False)
+        d = jax.lax.dynamic_index_in_dim(dst, i, keepdims=False)
+        if kind != "sum":  # padding must contribute the identity
+            v = jnp.where((d < n_nodes)[(...,) + (None,) * (v.ndim - 1)],
+                          v, ident)
+        return segment_reduce(v, d, n_nodes + 1, monoid)
+
+    out = scheduled_reduce(chunk_reduce, n_chunks, config.consistency,
+                           monoid)
+    return constrain_flat(out[:n_nodes])
+
+
+def segment_softmax(logits: jnp.ndarray, dst: jnp.ndarray, n_nodes: int,
+                    config: SystemConfig = DEFAULT_GNN_CONFIG) -> jnp.ndarray:
+    """Edge softmax normalised over incoming edges of each target."""
+    mx = aggregate(logits, dst, n_nodes, "max", config)
+    ex = jnp.exp(logits - jnp.take(mx, dst, axis=0))
+    den = aggregate(ex, dst, n_nodes, "sum", config)
+    return ex / jnp.maximum(jnp.take(den, dst, axis=0), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# MLP stacks (MeshGraphNet/SchNet/PNA style)
+# ---------------------------------------------------------------------------
+def init_mlp_stack(key, dims: tuple[int, ...], dtype=jnp.float32,
+                   layer_norm: bool = False):
+    ks = jax.random.split(key, len(dims) - 1)
+    p = {"layers": [L.init_dense(k, dims[i], dims[i + 1], use_bias=True,
+                                 dtype=dtype)
+                    for i, k in enumerate(ks)]}
+    if layer_norm:
+        p["ln"] = L.init_norm(dims[-1], dtype)
+    return p
+
+
+def mlp_stack(p, x, act=jax.nn.relu, final_act: bool = False):
+    n = len(p["layers"])
+    for i, lp in enumerate(p["layers"]):
+        x = L.dense(lp, x)
+        if i < n - 1 or final_act:
+            x = act(x.astype(jnp.float32)).astype(x.dtype)
+    if "ln" in p:
+        x = L.layer_norm(p["ln"], x)
+    return x

@@ -1,0 +1,86 @@
+"""PNA — Principal Neighbourhood Aggregation [arXiv:2004.05718].
+
+4 layers, hidden 75, aggregators {mean, max, min, std} x scalers
+{identity, amplification, attenuation} -> 12 aggregated views, concatenated
+and mixed by a linear tower.  The multi-aggregator step is 4 parallel
+segment reductions — the densest consumer of the paper's design space in
+this suite (each reduction goes through ``common.aggregate``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config_space import SystemConfig
+from repro.models import layers as L
+from repro.models.gnn.common import (DEFAULT_GNN_CONFIG, aggregate,
+                                     init_mlp_stack, mlp_stack)
+
+__all__ = ["PNAConfig", "init_pna", "pna_forward", "pna_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 1433
+    n_classes: int = 7
+    delta: float = 2.5   # mean log-degree of the training graphs
+    sys: SystemConfig = DEFAULT_GNN_CONFIG
+
+
+def init_pna(key, cfg: PNAConfig):
+    ks = jax.random.split(key, 3)
+    h = cfg.d_hidden
+
+    def block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "pre": init_mlp_stack(k1, (2 * h, h)),      # msg MLP(h_src,h_dst)
+            "post": init_mlp_stack(k2, (12 * h + h, h), layer_norm=True),
+        }
+
+    return {
+        "enc": init_mlp_stack(ks[0], (cfg.d_in, h)),
+        "blocks": jax.vmap(block)(jax.random.split(ks[1], cfg.n_layers)),
+        "head": init_mlp_stack(ks[2], (h, h, cfg.n_classes)),
+    }
+
+
+def pna_forward(cfg: PNAConfig, params, inputs):
+    """inputs: node_feat [N,F], src/dst [E], in_degree [N]."""
+    n = inputs["node_feat"].shape[0]
+    src, dst = inputs["src"], inputs["dst"]
+    deg = jnp.maximum(inputs["in_degree"].astype(jnp.float32), 1.0)
+    log_deg = jnp.log(deg + 1.0)[:, None]
+    s_amp = (log_deg / cfg.delta)
+    s_att = (cfg.delta / log_deg)
+
+    h = mlp_stack(params["enc"], inputs["node_feat"])
+
+    def body(h, bp):
+        msg = mlp_stack(bp["pre"], jnp.concatenate(
+            [jnp.take(h, src, axis=0), jnp.take(h, dst, axis=0)], axis=-1))
+        ssum = aggregate(msg, dst, n, "sum", cfg.sys)
+        mean = ssum / deg[:, None]
+        mx = aggregate(msg, dst, n, "max", cfg.sys)
+        mn = aggregate(msg, dst, n, "min", cfg.sys)
+        sq = aggregate(msg * msg, dst, n, "sum", cfg.sys) / deg[:, None]
+        std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-5)
+        mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+        mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+        agg = jnp.concatenate([mean, mx, mn, std], axis=-1)     # [N, 4h]
+        agg = jnp.concatenate([agg, agg * s_amp, agg * s_att], axis=-1)
+        h = h + mlp_stack(bp["post"], jnp.concatenate([h, agg], axis=-1))
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return mlp_stack(params["head"], h)
+
+
+def pna_loss(cfg: PNAConfig, params, batch):
+    logits = pna_forward(cfg, params, batch)
+    return L.cross_entropy(logits, batch["labels"])

@@ -1,0 +1,153 @@
+"""Real spherical harmonics + Wigner rotation blocks for eSCN-style models.
+
+``real_sph_harm`` evaluates real SH up to ``l_max`` via the associated-
+Legendre recurrence (fully vectorised jnp; differentiable).
+
+``wigner_blocks`` builds the per-degree rotation matrices D_l(R) with the
+sample-projection identity  Y_l(R r) = D_l Y_l(r):  for a fixed, well-
+conditioned set of sample directions S (host-side constant),
+D_l = Y_l(R S) @ pinv(Y_l(S)).  This avoids the Ivanic-Ruedenberg
+recursion entirely while staying exact (the system is overdetermined:
+|S| >> 2l+1) and jit/vmap-friendly.  pinv(Y_l(S)) is precomputed in numpy.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["real_sph_harm", "align_z_rotation", "wigner_blocks",
+           "n_coeffs", "kept_rows"]
+
+
+def n_coeffs(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def kept_rows(l_max: int, m_max: int) -> np.ndarray:
+    """Indices of coefficients with |m| <= m_max (the eSCN O(L^3) cut)."""
+    rows = []
+    off = 0
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            if abs(m) <= m_max:
+                rows.append(off + m + l)
+        off += 2 * l + 1
+    return np.asarray(rows, np.int32)
+
+
+def real_sph_harm(dirs: jnp.ndarray, l_max: int) -> jnp.ndarray:
+    """dirs [..., 3] (unit vectors) -> [..., (l_max+1)^2] real SH values,
+    ordered l-major, m from -l..l."""
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    ct = jnp.clip(z, -1.0, 1.0)                      # cos(theta)
+    st = jnp.sqrt(jnp.maximum(1.0 - ct * ct, 1e-12))
+    phi = jnp.arctan2(y, x)
+
+    # associated Legendre P_l^m(ct) for 0 <= m <= l <= l_max
+    p = {}
+    p[(0, 0)] = jnp.ones_like(ct)
+    for m in range(1, l_max + 1):
+        p[(m, m)] = -(2 * m - 1) * st * p[(m - 1, m - 1)]
+    for m in range(0, l_max):
+        p[(m + 1, m)] = (2 * m + 1) * ct * p[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            p[(l, m)] = ((2 * l - 1) * ct * p[(l - 1, m)]
+                         - (l + m - 1) * p[(l - 2, m)]) / (l - m)
+
+    import math
+    fact = [float(math.factorial(i)) for i in range(2 * l_max + 1)]
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            k = np.sqrt((2 * l + 1) / (4 * np.pi)
+                        * fact[l - am] / fact[l + am])
+            if m == 0:
+                out.append(k * p[(l, 0)])
+            elif m > 0:
+                out.append(np.sqrt(2.0) * k * jnp.cos(m * phi) * p[(l, m)])
+            else:
+                out.append(np.sqrt(2.0) * k * jnp.sin(am * phi) * p[(l, am)])
+    return jnp.stack(out, axis=-1)
+
+
+def align_z_rotation(e: jnp.ndarray) -> jnp.ndarray:
+    """Rotation matrix R with R @ e = z_hat (Rodrigues; e [..., 3] unit)."""
+    z = jnp.zeros_like(e).at[..., 2].set(1.0)
+    v = jnp.cross(e, z)                     # rotation axis * sin
+    c = e[..., 2]                           # cos angle
+    s2 = jnp.sum(v * v, axis=-1)
+    # skew(v)
+    zero = jnp.zeros_like(c)
+    k = jnp.stack([
+        jnp.stack([zero, -v[..., 2], v[..., 1]], -1),
+        jnp.stack([v[..., 2], zero, -v[..., 0]], -1),
+        jnp.stack([-v[..., 1], v[..., 0], zero], -1),
+    ], -2)
+    eye = jnp.broadcast_to(jnp.eye(3), k.shape)
+    coef = jnp.where(s2 > 1e-12, (1.0 - c) / jnp.maximum(s2, 1e-12), 0.5)
+    r = eye + k + coef[..., None, None] * (k @ k)
+    # antipodal case e = -z: rotate pi about x
+    flip = jnp.broadcast_to(
+        jnp.asarray([[1.0, 0, 0], [0, -1.0, 0], [0, 0, -1.0]]), k.shape)
+    return jnp.where((c < -1.0 + 1e-9)[..., None, None], flip, r)
+
+
+@lru_cache(maxsize=None)
+def _sample_dirs(n_pts: int = 64, seed: int = 7):
+    """Fibonacci-sphere sample directions + per-l pinv of their SH matrix."""
+    i = np.arange(n_pts, dtype=np.float64) + 0.5
+    phi = np.arccos(1 - 2 * i / n_pts)
+    theta = np.pi * (1 + 5 ** 0.5) * i
+    dirs = np.stack([np.sin(phi) * np.cos(theta),
+                     np.sin(phi) * np.sin(theta),
+                     np.cos(phi)], axis=-1)
+    return dirs
+
+
+@lru_cache(maxsize=None)
+def _pinv_blocks(l_max: int, n_pts: int = 64):
+    dirs = _sample_dirs(n_pts)
+    # May be reached during an outer trace (first call inside a jitted
+    # forward); force eager evaluation of this host-side constant.
+    with jax.ensure_compile_time_eval():
+        y = np.asarray(real_sph_harm(jnp.asarray(dirs), l_max),
+                       np.float64)            # [n_pts, (L+1)^2]
+    pinvs = []
+    off = 0
+    for l in range(l_max + 1):
+        a = y[:, off:off + 2 * l + 1]         # [n_pts, 2l+1]
+        pinvs.append(np.linalg.pinv(a.T))     # [n_pts, 2l+1]
+        off += 2 * l + 1
+    return dirs, pinvs
+
+
+def wigner_blocks(rot: jnp.ndarray, l_max: int, n_pts: int = 64,
+                  m_max: int | None = None):
+    """rot [..., 3, 3] -> list of D_l blocks, l = 0..l_max.
+
+    With ``m_max`` set, only the rows with |m| <= m_max are built
+    ([..., n_kept_l, 2l+1]) — the eSCN cut applied at construction, which
+    also skips ~40% of the projection compute at l_max=6, m_max=2."""
+    dirs_np, pinvs = _pinv_blocks(l_max, n_pts)
+    dirs = jnp.asarray(dirs_np, rot.dtype)                    # [P, 3]
+    rdirs = jnp.einsum("...ij,pj->...pi", rot, dirs)          # [..., P, 3]
+    y_rot = real_sph_harm(rdirs, l_max)                       # [..., P, K]
+    blocks = []
+    off = 0
+    for l in range(l_max + 1):
+        b = y_rot[..., off:off + 2 * l + 1]                   # [..., P, 2l+1]
+        if m_max is not None and l > m_max:
+            # rows m = -m_max..m_max live at indices l+m
+            keep = np.arange(l - m_max, l + m_max + 1)
+            b = b[..., keep]
+        # D = Y(RS)^T @ pinv(Y(S))^T  (so that Y(R r) = D Y(r))
+        d = jnp.einsum("...pm,pn->...mn",
+                       b, jnp.asarray(pinvs[l], rot.dtype))
+        blocks.append(d)
+        off += 2 * l + 1
+    return blocks

@@ -1,0 +1,231 @@
+"""Shared neural building blocks (functional: params are plain pytrees).
+
+Everything here is shape-polymorphic and shard_map/pjit-friendly; matmuls
+accumulate in fp32 (``preferred_element_type``) with bf16 params/activations
+by default — the TPU-native mixed-precision contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Dtypes", "DEFAULT_DTYPES", "dense", "init_dense", "rms_norm",
+           "layer_norm", "init_norm", "rope", "blocked_attention_xla",
+           "gqa_attention", "mlp", "init_mlp", "cross_entropy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dtypes:
+    param: jnp.dtype = jnp.bfloat16
+    compute: jnp.dtype = jnp.bfloat16
+    accum: jnp.dtype = jnp.float32
+
+
+DEFAULT_DTYPES = Dtypes()
+
+
+# ---------------------------------------------------------------------------
+# linear / norm
+# ---------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, use_bias: bool = False,
+               dtype=jnp.bfloat16, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+    p = {"w": w.astype(dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    # Output dtype == input dtype (bf16 in, bf16 out).  The TPU MXU always
+    # accumulates fp32 internally; emitting bf16 keeps the BACKWARD
+    # cotangents bf16 too — an fp32 output here makes every activation
+    # cotangent fp32, doubling backward memory AND collective bytes
+    # (measured: §Perf iteration A1).
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_norm(d: int, dtype=jnp.bfloat16, with_bias: bool = False):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rms_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x [..., S, D] (D even), positions [..., S] -> rotated x."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., ::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (blocked-XLA path; the Pallas kernel is the TPU fast path)
+# ---------------------------------------------------------------------------
+def blocked_attention_xla(q, k, v, *, causal: bool = True,
+                          window: Optional[int] = None,
+                          q_chunk: int = 1024, k_chunk: int = 1024):
+    """Memory-efficient (online-softmax) attention in pure XLA.
+
+    q [B,H,Sq,D], k/v [B,H,Sk,D].  Peak intermediate is
+    [B,H,q_chunk,k_chunk] — never Sq x Sk.  Mirrors the Pallas flash
+    kernel's math so either can serve a model unchanged.
+    ``window``: optional sliding-window (StarCoder2) causal mask width.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    orig_sq = sq
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    if sq % q_chunk:
+        pad = q_chunk - sq % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        sq += pad
+    if sk % k_chunk:
+        padk = k_chunk - sk % k_chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, padk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, padk), (0, 0)))
+    n_q, n_k = sq // q_chunk, k.shape[2] // k_chunk
+    scale = d ** -0.5
+    seq_off = sk - orig_sq  # causal offset (q is the suffix)
+
+    q_r = q.reshape(b, h, n_q, q_chunk, d)
+
+    def q_step(qi):
+        qc = q_r[:, :, qi]                     # [B,H,qc,D]
+        rows = qi * q_chunk + jnp.arange(q_chunk) + seq_off
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, 2)
+            vs = jax.lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, 2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc, ks,
+                           preferred_element_type=jnp.float32) * scale
+            cols = ki * k_chunk + jnp.arange(k_chunk)
+            mask = cols[None, :] <= sk - 1     # drop kv padding
+            if causal:
+                mask &= cols[None, :] <= rows[:, None]
+            if window is not None:
+                mask &= cols[None, :] > rows[:, None] - window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l_new = l * alpha + p.sum(-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vs.dtype), vs,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, h, q_chunk, 1), -1e30, jnp.float32),
+                jnp.zeros((b, h, q_chunk, 1), jnp.float32),
+                jnp.zeros((b, h, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(k_step, init, jnp.arange(n_k))
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    # remat each q-chunk: the inner k-scan would otherwise SAVE its fp32
+    # (m, l, acc) carries per k step for the backward — recomputing the
+    # chunk is the flash-attention backward contract (§Perf A4)
+    q_step = jax.checkpoint(q_step)
+    out = jax.lax.map(q_step, jnp.arange(n_q))       # [n_q,B,H,qc,D]
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, sq, d)
+    return out[:, :, :orig_sq]
+
+
+def gqa_attention(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None):
+    """GQA wrapper: q [B,Hq,S,D], k/v [B,Hkv,S,D].
+
+    k/v are shared across each query group via vmap broadcasting — no
+    ``repeat`` materialisation (that would multiply KV-cache bytes by the
+    group size; fatal at 500k context).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if hq == hkv:
+        return blocked_attention_xla(q, k, v, causal=causal, window=window)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d).transpose(2, 0, 1, 3, 4)  # [G,B,Hkv,S,D]
+    out = jax.vmap(lambda qq: blocked_attention_xla(
+        qq, k, v, causal=causal, window=window))(qg)
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, act: str, use_bias: bool = False,
+             dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_dense(k1, d_model, d_ff, use_bias, dtype),
+         "down": init_dense(k2, d_ff, d_model, use_bias, dtype)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = init_dense(k3, d_model, d_ff, use_bias, dtype)
+    return p
+
+
+def mlp(p, x, act: str):
+    # activations evaluated in the compute dtype (bf16): keeps cotangents
+    # bf16 (see `dense`); norms/softmax stay fp32 where it matters.
+    up = dense(p["up"], x)
+    if act == "swiglu":
+        up = jax.nn.silu(dense(p["gate"], x)) * up
+    elif act == "geglu":
+        up = jax.nn.gelu(dense(p["gate"], x)) * up
+    elif act == "gelu":
+        up = jax.nn.gelu(up)
+    elif act == "relu":
+        up = jax.nn.relu(up)
+    elif act == "silu":
+        up = jax.nn.silu(up)
+    else:
+        raise ValueError(act)
+    return dense(p["down"], up)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  ignore_id: int = -1) -> jnp.ndarray:
+    """logits [..., V] fp32-safe CE with ignore mask; mean over valid."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    valid = labels != ignore_id
+    return jnp.sum(nll * valid) / jnp.maximum(valid.sum(), 1)

@@ -1,0 +1,270 @@
+"""Dense GQA transformer LM (command-r-plus-104b / command-r-35b /
+starcoder2-7b) with scan-over-layers (compile time independent of depth),
+per-block activation remat, and three lowered entry points:
+
+- ``train_forward``  — next-token CE loss (train_* shapes)
+- ``prefill``        — causal forward returning the KV cache (prefill_*)
+- ``decode_step``    — one token against a KV cache (decode_* / long_*)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["LMConfig", "init_lm", "train_forward", "prefill", "decode_step",
+           "abstract_lm_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"
+    norm: str = "rmsnorm"
+    parallel_block: bool = False   # command-r family: attn + mlp in parallel
+    use_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None   # starcoder2: sliding-window attention
+    tie_embeddings: bool = True
+    remat: bool = True
+    param_dtype: str = "bfloat16"
+    ce_chunk: int = 256            # sequence-chunked CE: never materialise
+    #                                the full [B,S,V] logits tensor
+    dp_axes: tuple = ()            # mesh axes for batch ("data"[, "pod"])
+    tp_axis: Optional[str] = None  # mesh axis for tensor parallelism
+    sp_axis: Optional[str] = None  # sequence-parallel axis between blocks
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def n_params(self) -> int:
+        d, f, v, h = self.d_model, self.d_ff, self.vocab, self.d_head
+        attn = d * h * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * h * d
+        glu = 3 if self.act in ("swiglu", "geglu") else 2
+        return self.n_layers * (attn + glu * d * f) + v * d
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: LMConfig):
+    ks = jax.random.split(key, 8)
+    dt = cfg.dtype
+    h = cfg.d_head
+    p = {
+        "ln1": L.init_norm(cfg.d_model, dt),
+        "attn": {
+            "wq": L.init_dense(ks[0], cfg.d_model, cfg.n_heads * h,
+                               cfg.use_bias, dt),
+            "wk": L.init_dense(ks[1], cfg.d_model, cfg.n_kv_heads * h,
+                               cfg.use_bias, dt),
+            "wv": L.init_dense(ks[2], cfg.d_model, cfg.n_kv_heads * h,
+                               cfg.use_bias, dt),
+            "wo": L.init_dense(ks[3], cfg.n_heads * h, cfg.d_model,
+                               cfg.use_bias, dt),
+        },
+        "mlp": L.init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.act,
+                          cfg.use_bias, dt),
+    }
+    if not cfg.parallel_block:
+        p["ln2"] = L.init_norm(cfg.d_model, dt)
+    return p
+
+
+def init_lm(key, cfg: LMConfig):
+    k_embed, k_blocks = jax.random.split(key)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(
+        jax.random.split(k_blocks, cfg.n_layers))
+    p = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(cfg.dtype),
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg.d_model, cfg.dtype),
+    }
+    return p
+
+
+def abstract_lm_params(cfg: LMConfig):
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _norm(cfg, p, x):
+    return L.rms_norm(p, x) if cfg.norm == "rmsnorm" else L.layer_norm(p, x)
+
+
+def _attention(cfg: LMConfig, p, x, positions, kv=None, kv_len=None):
+    """x [B,S,d].  kv: optional (k_cache, v_cache) [B,Hkv,Smax,dh] for
+    decode; returns (out [B,S,d], (k, v) computed for these tokens)."""
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = L.dense(p["wq"], x).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = L.dense(p["wk"], x).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = L.dense(p["wv"], x).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    q = L.rope(q, positions[:, None, :], cfg.rope_theta)
+    k = L.rope(k, positions[:, None, :], cfg.rope_theta)
+    if kv is None:
+        o = L.gqa_attention(q, k, v, causal=True, window=cfg.window)
+    else:
+        kc, vc = kv
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 kv_len, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 kv_len, axis=2)
+        from repro.kernels.flash_attention.ref import decode_ref
+        o = decode_ref(q, kc, vc, kv_len + s, window=cfg.window)
+        k, v = kc, vc
+    o = o.astype(x.dtype)  # cache dtype may differ (e.g. fp32 cache)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return L.dense(p["wo"], o), (k, v)
+
+
+def _block(cfg: LMConfig, p, x, positions):
+    h = _norm(cfg, p["ln1"], x)
+    a, _ = _attention(cfg, p["attn"], h, positions)
+    if cfg.parallel_block:
+        m = L.mlp(p["mlp"], h, cfg.act)
+        return x + a + m
+    x = x + a
+    h2 = _norm(cfg, p["ln2"], x)
+    return x + L.mlp(p["mlp"], h2, cfg.act)
+
+
+def _constrain_act(cfg: LMConfig, x):
+    """Sequence-parallel sharding constraint on the scan carry: the remat
+    residual per layer is then S-sharded -> 1/tp of the activation bytes."""
+    if cfg.sp_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        x = jax.lax.with_sharding_constraint(
+            x, P(cfg.dp_axes or None, cfg.sp_axis, None))
+    return x
+
+
+def _stack(cfg: LMConfig, params, x, positions):
+    block = partial(_block, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(block,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, layer_p):
+        carry = _constrain_act(cfg, carry)
+        return block(layer_p, carry, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def _logits(cfg, params, x):
+    x = _norm(cfg, params["final_norm"], x)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_ce(cfg: LMConfig, params, x, labels):
+    """Sequence-chunked cross-entropy: per-chunk logits [B,c,V] only."""
+    b, s, _ = x.shape
+    c = min(cfg.ce_chunk, s)
+    n = s // c
+    xc = x[:, :n * c].reshape(b, n, c, -1)
+    lc = labels[:, :n * c].reshape(b, n, c)
+
+    def body(carry, i):
+        xi = jax.lax.dynamic_index_in_dim(xc, i, axis=1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(lc, i, axis=1, keepdims=False)
+        # logits matmul stays in the compute dtype: an fp32 output here
+        # would make the cotangent of x fp32 through the WHOLE backward
+        # scan (2x bytes on every activation collective — §Perf A2);
+        # the softmax/CE itself is fp32.
+        h = _norm(cfg, params["final_norm"], xi)
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        if cfg.tp_axis is not None:
+            from jax.sharding import PartitionSpec as P
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(cfg.dp_axes or None, None, cfg.tp_axis))
+        logits32 = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits32, axis=-1)
+        picked = jnp.take_along_axis(
+            logits32, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        valid = li != -1
+        nll = jnp.sum((lse - picked) * valid)
+        return (carry[0] + nll, carry[1] + valid.sum()), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.int32(0)),
+                                 jnp.arange(n))
+    return nll / jnp.maximum(cnt, 1)
+
+
+def train_forward(cfg: LMConfig, params, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _stack(cfg, params, x, positions)
+    return chunked_ce(cfg, params, x, labels)
+
+
+def prefill(cfg: LMConfig, params, tokens):
+    """Returns (last-token logits [B,V], cache (k,v) [L,B,Hkv,S,dh])."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(carry, layer_p):
+        h = _norm(cfg, layer_p["ln1"], carry)
+        a, (k, v) = _attention(cfg, layer_p["attn"], h, positions)
+        if cfg.parallel_block:
+            out = carry + a + L.mlp(layer_p["mlp"], h, cfg.act)
+        else:
+            mid = carry + a
+            out = mid + L.mlp(layer_p["mlp"], _norm(cfg, layer_p["ln2"], mid),
+                              cfg.act)
+        return out, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    return _logits(cfg, params, x[:, -1:, :])[:, 0], (ks, vs)
+
+
+def decode_step(cfg: LMConfig, params, token, cache, kv_len):
+    """token [B,1]; cache (k,v) [L,B,Hkv,Smax,dh]; kv_len int32 scalar.
+    Returns (logits [B,1,V], new cache)."""
+    b = token.shape[0]
+    positions = jnp.broadcast_to(kv_len, (b, 1)).astype(jnp.int32)
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def body(carry, xs):
+        layer_p, kc, vc = xs
+        h = _norm(cfg, layer_p["ln1"], carry)
+        a, (kc, vc) = _attention(cfg, layer_p["attn"], h, positions,
+                                 kv=(kc, vc), kv_len=kv_len)
+        if cfg.parallel_block:
+            out = carry + a + L.mlp(layer_p["mlp"], h, cfg.act)
+        else:
+            mid = carry + a
+            out = mid + L.mlp(layer_p["mlp"], _norm(cfg, layer_p["ln2"], mid),
+                              cfg.act)
+        return out, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], *cache))
+    return _logits(cfg, params, x), (ks, vs)

@@ -1,0 +1,56 @@
+"""Gradient compression for cross-pod reduction (DESIGN.md §6).
+
+``CompressedReducer`` casts gradients to a narrow dtype before the
+(cross-pod) all-reduce and keeps the quantisation residual locally,
+adding it back into the next step's gradient (error feedback — the
+standard convergence-preserving trick).  At 2×16×16 scale the pod-axis
+gradient reduction halves its bytes with bf16 (or 4× with f8 where
+supported); the within-pod reduction stays full precision.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressedReducer"]
+
+
+class CompressedReducer:
+    """compress -> reduce_fn -> decompress, with error feedback.
+
+    ``reduce_fn`` is whatever performs the cross-replica mean (a psum
+    inside shard_map, or identity under GSPMD where jit inserts it); this
+    class owns only the numerics.
+    """
+
+    def __init__(self, dtype=jnp.bfloat16):
+        self.dtype = jnp.dtype(dtype)
+
+    def init_state(self, grads: Any) -> Any:
+        """Per-leaf fp32 residual accumulators."""
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def compress(self, grads: Any, state: Any) -> tuple[Any, Any]:
+        """Returns (wire_grads in self.dtype, new residual state)."""
+        def one(g, r):
+            full = g.astype(jnp.float32) + r
+            wire = full.astype(self.dtype)
+            return wire, full - wire.astype(jnp.float32)
+
+        pairs = jax.tree.map(one, grads, state)
+        wires = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        resid = jax.tree.map(lambda p: p[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return wires, resid
+
+    def reduce(self, grads: Any, state: Any, reduce_fn=None
+               ) -> tuple[Any, Any]:
+        """One full round: compress -> reduce -> fp32 decompress."""
+        wires, resid = self.compress(grads, state)
+        if reduce_fn is not None:
+            wires = reduce_fn(wires)
+        out = jax.tree.map(lambda w: w.astype(jnp.float32), wires)
+        return out, resid

@@ -1,0 +1,148 @@
+"""Sharded, atomic, resharding-on-restore checkpointing (no orbax dep).
+
+Layout:  <dir>/step_<N>/
+            manifest.json       tree structure, shapes, dtypes, step, mesh
+            shard_<i>.npz       flat leaf arrays (host-local shard or full)
+
+Writes are crash-safe: a temp directory is populated, fsync'd, then
+atomically renamed; a ``latest`` symlink flips last.  ``AsyncCheckpointer``
+overlaps serialization with training (one in-flight save, back-pressure on
+the next).  Restore accepts a different device count/mesh than the save
+(elastic restarts): arrays are saved fully-replicated from host RAM and
+re-sharded on load by ``jax.device_put`` with the new sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_names(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, paths, _ = _flatten_with_names(tree)
+    arrays = {}
+    meta = []
+    for i, (leaf, path) in enumerate(zip(leaves, paths)):
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[f"leaf_{i}"] = arr
+        meta.append({"path": path, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+    np.savez(tmp / "shard_0.npz", **arrays)
+    manifest = {
+        "step": int(step),
+        "n_leaves": len(leaves),
+        "leaves": meta,
+        "format": 1,
+        "extra": extra or {},
+    }
+    (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=2))
+    # fsync the manifest for crash safety, then atomic publish
+    with open(tmp / _MANIFEST, "rb") as f:
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    latest = directory / "latest"
+    tmp_link = directory / ".latest_tmp"
+    if tmp_link.exists() or tmp_link.is_symlink():
+        tmp_link.unlink()
+    tmp_link.symlink_to(final.name)
+    os.replace(tmp_link, latest)
+    return final
+
+
+def latest_step(directory: str | os.PathLike) -> Optional[int]:
+    directory = Path(directory)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in directory.glob("step_*") if p.is_dir())
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str | os.PathLike, tree_like: Any,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``tree_like``; ``shardings`` (optional
+    pytree of NamedSharding, may target a different mesh than the save)
+    re-shards on load — the elastic-restart path."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / _MANIFEST).read_text())
+    with np.load(d / "shard_0.npz") as z:
+        arrays = [z[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    leaves, treedef = jax.tree.flatten(tree_like)
+    if len(leaves) != len(arrays):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, expected {len(leaves)}")
+    if shardings is not None:
+        shard_leaves = jax.tree.flatten(shardings)[0] \
+            if not isinstance(shardings, jax.sharding.Sharding) \
+            else [shardings] * len(arrays)
+        arrays = [jax.device_put(a.astype(l.dtype), s)
+                  for a, l, s in zip(arrays, leaves, shard_leaves)]
+    else:
+        arrays = [jax.numpy.asarray(a.astype(l.dtype))
+                  for a, l in zip(arrays, leaves)]
+    return treedef.unflatten(arrays), step, manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """One background writer thread; ``save`` returns immediately, the next
+    save (or ``wait``) blocks until the previous one lands."""
+
+    def __init__(self, directory: str | os.PathLike):
+        self.directory = Path(directory)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+            except BaseException as exc:  # surfaced on next wait()
+                self._error = exc
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,131 @@
+"""Fault-tolerance machinery for 1000+-node posture.
+
+- :class:`PreemptionGuard` — SIGTERM/SIGINT → "checkpoint now, exit clean".
+- :func:`run_step_with_retry` — bounded retry around a train step for
+  transient executor failures; re-raises on persistent ones.
+- :class:`ElasticMesh` — rebuild a (data, model) mesh after losing hosts
+  and recompute shardings; restore path reshards checkpoints (see
+  checkpoint.restore_checkpoint).
+- :class:`StragglerPolicy` — step-time tracker: flags outlier steps and
+  recommends data re-dispatch (deterministic batch reassignment) when a
+  host is persistently slow.  On-device timing comes from the caller.
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+__all__ = ["PreemptionGuard", "run_step_with_retry", "ElasticMesh",
+           "StragglerPolicy"]
+
+
+class PreemptionGuard:
+    """Converts SIGTERM/SIGINT into a flag the train loop polls each step."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._requested = False
+        self._previous = {}
+        for s in signals:
+            try:
+                self._previous[s] = signal.signal(s, self._handler)
+            except ValueError:  # not main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def restore(self):
+        for s, h in self._previous.items():
+            signal.signal(s, h)
+
+
+def run_step_with_retry(step_fn: Callable[..., Any], *args,
+                        max_retries: int = 3, backoff_s: float = 0.5,
+                        on_retry: Optional[Callable[[int, Exception], None]]
+                        = None, **kwargs):
+    """Retry transient step failures (link flap, DMA timeout class).
+
+    jax surfaces these as XlaRuntimeError; deterministic program errors
+    (shape/type) also raise XlaRuntimeError at dispatch, so retries are
+    bounded and the last error always re-raises.
+    """
+    attempt = 0
+    while True:
+        try:
+            return step_fn(*args, **kwargs)
+        except jax.errors.JaxRuntimeError as exc:
+            attempt += 1
+            if attempt > max_retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+
+class ElasticMesh:
+    """Rebuilds the largest usable (data, model) mesh from live devices.
+
+    Keeps the model axis fixed (TP degree is baked into weight shapes) and
+    shrinks the data axis to the largest multiple that fits — the elastic
+    scaling contract: lose a pod, halve DP, reshard, continue.
+    """
+
+    def __init__(self, model_parallel: int):
+        self.model_parallel = model_parallel
+
+    def build(self, devices=None):
+        devices = devices if devices is not None else jax.devices()
+        n = len(devices)
+        mp = self.model_parallel
+        dp = max(1, n // mp)
+        usable = dp * mp
+        import numpy as np
+        from jax.sharding import Mesh
+        arr = np.asarray(devices[:usable]).reshape(dp, mp)
+        return Mesh(arr, ("data", "model"))
+
+    def reshard(self, tree, mesh, spec_tree):
+        from jax.sharding import NamedSharding
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        if spec_tree is None:
+            sharding = NamedSharding(mesh, P())
+            return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
+        shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                 is_leaf=lambda x: isinstance(
+                                     x, jax.sharding.PartitionSpec))
+        return jax.tree.map(jax.device_put, tree, shardings)
+
+
+class StragglerPolicy:
+    """Flags steps slower than ``threshold`` x rolling median; after
+    ``patience`` consecutive flags, recommends re-dispatch."""
+
+    def __init__(self, window: int = 32, threshold: float = 2.0,
+                 patience: int = 3):
+        self.window = window
+        self.threshold = threshold
+        self.patience = patience
+        self._times: list[float] = []
+        self._consecutive = 0
+
+    def observe(self, step_seconds: float) -> dict:
+        self._times.append(step_seconds)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        med = statistics.median(self._times)
+        slow = len(self._times) >= 8 and step_seconds > self.threshold * med
+        self._consecutive = self._consecutive + 1 if slow else 0
+        return {
+            "median_s": med,
+            "slow": slow,
+            "redispatch": self._consecutive >= self.patience,
+        }

@@ -1,0 +1,84 @@
+"""Generic fault-tolerant training loop.
+
+Wires together: arch registry step functions, AdamW, the sharded data
+pipeline, async checkpointing, preemption handling, bounded step retry and
+the straggler tracker.  Works on 1 CPU device (smoke/examples) and on the
+production mesh unchanged — the step function is the same object the
+dry-run compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.data.pipeline import ShardedPipeline
+from repro.optim.adamw import adamw_init
+from repro.train.checkpoint import AsyncCheckpointer, restore_checkpoint
+from repro.train.fault_tolerance import (PreemptionGuard, StragglerPolicy,
+                                         run_step_with_retry)
+
+__all__ = ["TrainLoopConfig", "train_loop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    checkpoint_dir: Optional[str] = None
+    resume: bool = True
+    max_step_retries: int = 3
+
+
+def train_loop(step_fn: Callable, params: Any, make_batch: Callable[[int], Any],
+               cfg: TrainLoopConfig, opt_state: Any = None,
+               log_fn: Callable[[dict], None] = None) -> tuple[Any, Any, list]:
+    """step_fn(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt_state = opt_state if opt_state is not None else adamw_init(params)
+    start_step = 0
+    ckpt = AsyncCheckpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None
+    if ckpt and cfg.resume:
+        try:
+            (params, opt_state), start_step, _ = restore_checkpoint(
+                cfg.checkpoint_dir, (params, opt_state))
+            start_step += 1
+        except FileNotFoundError:
+            pass
+
+    guard = PreemptionGuard()
+    straggler = StragglerPolicy()
+    pipeline = ShardedPipeline(make_batch, start_step=start_step)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    history = []
+    try:
+        for step, batch in pipeline:
+            if step >= cfg.total_steps:
+                break
+            t0 = time.perf_counter()
+            params, opt_state, metrics = run_step_with_retry(
+                jit_step, params, opt_state, batch,
+                max_retries=cfg.max_step_retries)
+            jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            verdict = straggler.observe(dt)
+            row = {"step": step, "seconds": dt,
+                   **{k: float(v) for k, v in metrics.items()},
+                   "straggler": verdict["slow"]}
+            history.append(row)
+            if log_fn and step % cfg.log_every == 0:
+                log_fn(row)
+            if ckpt and (step + 1) % cfg.checkpoint_every == 0:
+                ckpt.save(step, (params, opt_state))
+            if guard.preempted:
+                if ckpt:
+                    ckpt.save(step, (params, opt_state))
+                break
+    finally:
+        pipeline.close()
+        if ckpt:
+            ckpt.wait()
+        guard.restore()
+    return params, opt_state, history

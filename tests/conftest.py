@@ -1,0 +1,18 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import powerlaw_graph
+    return powerlaw_graph(400, 2400, alpha=1.0, seed=3, weighted=True,
+                          block_size=64)
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    from repro.graph import regular_graph
+    return regular_graph(96, 4, locality=0.4, seed=1, weighted=True,
+                         block_size=32)

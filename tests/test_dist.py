@@ -1,0 +1,138 @@
+"""Distributed-path tests: run in a subprocess with 8 host devices so the
+main test session keeps its single real device (dryrun.py contract)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_distributed_pagerank_llc_vs_owned():
+    """Both cluster-scale coherence schedules match the numpy oracle."""
+    out = _run("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.graph import powerlaw_graph
+        from repro.graph.partition import partition_edges_1d
+        from repro.core.config_space import SystemConfig
+        from repro.dist.collectives import make_distributed_pagerank_step
+        from repro.algorithms.reference import pagerank_np
+
+        g = powerlaw_graph(512, 3000, alpha=1.0, seed=3, block_size=64)
+        part = partition_edges_1d(g, 8)
+        mesh = jax.make_mesh((8,), ("data",))
+        ref = pagerank_np(g)
+        for cname in ("SGR", "SD1"):
+            cfg = SystemConfig.from_name(cname)
+            step = make_distributed_pagerank_step(mesh, cfg, g.n_nodes)
+            rank = jnp.full((g.n_nodes,), 1.0 / g.n_nodes)
+            inv = (1.0 / np.maximum(np.asarray(g.out_degree), 1)).astype(
+                np.float32)
+            # note: dangling handled outside for this test graph (none)
+            with mesh:
+                step = jax.jit(step)
+                for _ in range(60):
+                    rank = step(rank, jnp.asarray(inv),
+                                jnp.asarray(part.src), jnp.asarray(part.dst))
+            got = np.asarray(rank)
+            err = np.abs(got - ref).max()
+            assert err < 1e-3, (cname, err)
+            print("ok", cname, err)
+    """)
+    assert out.count("ok") == 2
+
+
+def test_pipeline_parallel_identity():
+    """4-stage pipeline of per-stage affine fns == sequential composition."""
+    out = _run("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.dist.pp import pipeline_apply
+
+        mesh = jax.make_mesh((4, 2), ("stage", "data"))
+        n_stages, m, mb, d = 4, 6, 8, 16
+        key = jax.random.key(0)
+        w = jax.random.normal(key, (n_stages, d, d)) * 0.3
+
+        def stage_fn(params, x):
+            return jnp.tanh(x @ params["w"])
+
+        fn = pipeline_apply(mesh, "stage", stage_fn, n_microbatches=m)
+        x = jax.random.normal(jax.random.key(1), (m, mb, d))
+        with mesh:
+            y = jax.jit(fn)({"w": w}, x)
+        # sequential reference
+        ref = x
+        for s in range(n_stages):
+            ref = jnp.tanh(ref @ w[s])
+        err = float(jnp.abs(y - ref).max())
+        assert err < 1e-5, err
+        print("pp ok", err)
+    """)
+    assert "pp ok" in out
+
+
+def test_lm_sharded_train_step_runs():
+    """Reduced LM train step actually executes SPMD on an 8-device mesh."""
+    out = _run("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.configs.base import axes_for_mesh
+        from repro.configs.registry import get_arch
+        from repro.optim.adamw import adamw_init
+        from repro.data.synthetic import lm_batch
+        import dataclasses
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ax = axes_for_mesh(mesh)
+        arch = get_arch("starcoder2-7b", axes=ax)
+        cfg = dataclasses.replace(arch.reduced_cfg, dp_axes=("data",),
+                                  tp_axis="model", sp_axis=None)
+        from repro.models.transformer import init_lm, train_forward
+        params = init_lm(jax.random.key(0), cfg)
+        opt = adamw_init(params)
+        batch = jax.tree.map(jnp.asarray, lm_batch(0, 8, 64, cfg.vocab))
+        from repro.optim.adamw import AdamWConfig, adamw_update
+
+        def step(p, o, b):
+            loss, g = jax.value_and_grad(
+                lambda pp: train_forward(cfg, pp, b))(p)
+            np_, no_, gn = adamw_update(g, o, p, AdamWConfig())
+            return np_, no_, loss
+
+        with mesh:
+            p2, o2, loss = jax.jit(step)(params, opt, batch)
+        assert np.isfinite(float(loss))
+        print("sharded train ok", float(loss))
+    """)
+    assert "sharded train ok" in out
+
+
+def test_dryrun_single_cell_subprocess():
+    """The dry-run entry point works end to end for one cell."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "dlrm-mlperf", "--shape", "serve_p99", "--mesh", "single",
+         "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, env=env, timeout=600,
+        cwd=str(REPO))
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(
+        (Path("/tmp/dryrun_test") /
+         "dlrm-mlperf__serve_p99__single.json").read_text())
+    assert res["ok"] and res["n_devices"] == 256

@@ -1,0 +1,69 @@
+"""Specialization model (Sec. IV): Table V reproduction + partial model."""
+import pytest
+
+from repro.core import (TABLE_III, GraphProfile, specialize,
+                        specialize_partial)
+from repro.core.config_space import SystemConfig
+from repro.graph.datasets import PAPER_STATS
+
+TABLE_V = {
+    "AMZ": dict(PR="SGR", SSSP="SGR", MIS="SGR", CLR="SGR", BC="SGR",
+                CC="DD1"),
+    "DCT": dict(PR="SGR", SSSP="SGR", MIS="SGR", CLR="SGR", BC="SGR",
+                CC="DD1"),
+    "EML": dict(PR="SGR", SSSP="SGR", MIS="SGR", CLR="SGR", BC="SGR",
+                CC="DD1"),
+    "OLS": dict(PR="SDR", SSSP="SDR", MIS="TG0", CLR="TG0", BC="SDR",
+                CC="DD1"),
+    "RAJ": dict(PR="SDR", SSSP="SDR", MIS="SDR", CLR="SDR", BC="SDR",
+                CC="DD1"),
+    "WNG": dict(PR="SGR", SSSP="SGR", MIS="SGR", CLR="SGR", BC="SGR",
+                CC="DD1"),
+}
+
+
+def _profile(name):
+    vc, rc, ic = PAPER_STATS[name][7:10]
+    return GraphProfile.from_classes(vc, rc, ic)
+
+
+@pytest.mark.parametrize("gname", sorted(TABLE_V))
+@pytest.mark.parametrize("app", ["PR", "SSSP", "MIS", "CLR", "BC", "CC"])
+def test_table_v_prediction(gname, app):
+    got = specialize(TABLE_III[app], _profile(gname)).name
+    assert got == TABLE_V[gname][app], (gname, app)
+
+
+def test_all_36_match():
+    n_match = sum(
+        specialize(TABLE_III[app], _profile(g)).name == TABLE_V[g][app]
+        for g in TABLE_V for app in TABLE_V[g])
+    assert n_match == 36
+
+
+class TestPartialModel:
+    """Sec. IV-B / Sec. VI interdependence: no DRFrlx -> different
+    push/pull recommendation."""
+
+    def test_mis_raj_flips_to_pull(self):
+        # the paper's flagship example: MIS x RAJ is SDR with DRFrlx,
+        # TG0 (pull) without it
+        prof = _profile("RAJ")
+        assert specialize(TABLE_III["MIS"], prof).name == "SDR"
+        assert specialize_partial(TABLE_III["MIS"], prof).name == "TG0"
+
+    def test_partial_never_emits_rlx(self):
+        for g in TABLE_V:
+            for app in TABLE_V[g]:
+                cfg = specialize_partial(TABLE_III[app], _profile(g))
+                assert cfg.consistency.value != "R", (g, app)
+
+    def test_source_control_still_pushes(self):
+        for g in TABLE_V:
+            cfg = specialize_partial(TABLE_III["SSSP"], _profile(g))
+            assert cfg.prop.value == "S"
+
+
+def test_config_names_roundtrip():
+    for name in ("TG0", "SGR", "SD1", "DD1", "SG0", "TDR"):
+        assert SystemConfig.from_name(name).name == name

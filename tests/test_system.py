@@ -1,0 +1,71 @@
+"""End-to-end behaviour: the specialization model drives the executor over
+real (synthetic-recreation) inputs — the paper's full loop."""
+import jax
+import numpy as np
+import pytest
+
+from repro.algorithms import REGISTRY
+from repro.algorithms.reference import (cc_np, is_maximal_independent_set,
+                                        is_proper_coloring, pagerank_np,
+                                        sssp_np)
+from repro.core import run, specialize
+from repro.core.taxonomy import profile_graph
+from repro.graph.datasets import paper_graph
+
+
+@pytest.mark.parametrize("gname", ["DCT", "RAJ"])
+@pytest.mark.parametrize("app", ["PR", "SSSP", "CC"])
+def test_specialized_execution_matches_oracle(gname, app):
+    """profile -> specialize -> execute -> verify, end to end."""
+    g = paper_graph(gname, scale=32, weighted=(app == "SSSP"))
+    profile = profile_graph(g)
+    program = REGISTRY[app]()
+    config = specialize(program.properties, profile)
+    res = run(program, g, config, key=jax.random.key(0))
+    assert res.converged
+    if app == "PR":
+        np.testing.assert_allclose(np.asarray(res.state["rank"]),
+                                   pagerank_np(g), atol=1e-4)
+    elif app == "SSSP":
+        ref = sssp_np(g)
+        got = np.asarray(res.state["dist"])
+        mask = np.isfinite(ref)
+        assert np.allclose(got[mask], ref[mask], atol=1e-3)
+    else:
+        np.testing.assert_array_equal(np.asarray(res.state["label"]),
+                                      cc_np(g))
+
+
+def test_predicted_config_is_competitive():
+    """The model-predicted config is within a reasonable factor of the
+    empirical best on a real measurement (paper: within 3.5%; we allow
+    2x on CPU where constant factors differ from the simulated GPU)."""
+    from repro.core import ALL_CONFIGS
+    g = paper_graph("RAJ", scale=32)
+    program = REGISTRY["PR"]()
+    profile = profile_graph(g)
+    predicted = specialize(program.properties, profile)
+    times = {}
+    for cfg in [predicted] + [c for c in ALL_CONFIGS
+                              if c.prop.value != "D"][:6]:
+        r = run(program, g, cfg, max_iters=30)
+        times[cfg.name] = r.seconds
+    best = min(times.values())
+    assert times[predicted.name] <= 2.5 * best, times
+
+
+def test_quickstart_example_runs():
+    import subprocess
+    import sys
+    from pathlib import Path
+    repo = Path(__file__).resolve().parent.parent
+    env = {"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env})
+    out = subprocess.run([sys.executable, str(repo / "examples" /
+                                              "quickstart.py")],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "converged" in out.stdout

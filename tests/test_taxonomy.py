@@ -1,0 +1,72 @@
+"""Eqs. 1-7 + Table II faithfulness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.taxonomy import (PAPER_GPU, classify_volume_kb, imbalance,
+                                 profile_graph, reuse, reuse_from_an,
+                                 volume_kb)
+from repro.graph import powerlaw_graph, regular_graph
+from repro.graph.datasets import PAPER_AN, PAPER_STATS, paper_graph
+
+
+class TestTableII:
+    """Published |V|,|E|,AN_L,AN_R,imbalance -> published classes."""
+
+    @pytest.mark.parametrize("name", sorted(PAPER_STATS))
+    def test_volume_value_and_class(self, name):
+        v, e, *_ = PAPER_STATS[name]
+        kb = volume_kb(v, e, PAPER_GPU)
+        assert kb == pytest.approx(PAPER_STATS[name][4], rel=5e-3)
+        assert classify_volume_kb(kb, PAPER_GPU) == PAPER_STATS[name][7]
+
+    @pytest.mark.parametrize("name", sorted(PAPER_STATS))
+    def test_reuse_class(self, name):
+        an_l, an_r = PAPER_AN[name]
+        avg = PAPER_STATS[name][3]
+        r = reuse_from_an(an_l, an_r, avg)
+        from repro.core.taxonomy import classify_reuse
+        assert classify_reuse(r, PAPER_GPU) == PAPER_STATS[name][8]
+
+    @pytest.mark.parametrize("name", sorted(PAPER_STATS))
+    def test_imbalance_class(self, name):
+        from repro.core.taxonomy import classify_imbalance
+        assert classify_imbalance(PAPER_STATS[name][6],
+                                  PAPER_GPU) == PAPER_STATS[name][9]
+
+
+class TestSyntheticRecreations:
+    """The generated stand-ins reproduce the paper's reuse/imbalance
+    classes when measured with our own Eq. 2-7 implementation."""
+
+    @pytest.mark.parametrize("name", sorted(PAPER_STATS))
+    def test_classes_match(self, name):
+        g = paper_graph(name, scale=16)
+        p = profile_graph(g, PAPER_GPU)
+        assert p.reuse_class == PAPER_STATS[name][8]
+        assert p.imbalance_class == PAPER_STATS[name][9]
+
+
+class TestMetricProperties:
+    @given(st.integers(100, 2000), st.floats(0.0, 1.0), st.integers(0, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_reuse_bounded(self, n, locality, seed):
+        g = regular_graph(n, 4, locality=locality, seed=seed, block_size=64)
+        r = reuse(g, PAPER_GPU)
+        assert 0.0 <= r <= 1.0
+
+    def test_reuse_monotone_in_locality(self):
+        rs = [reuse(regular_graph(2000, 8, locality=l, seed=7,
+                                  block_size=256), PAPER_GPU)
+              for l in (0.0, 0.5, 0.95)]
+        assert rs[0] < rs[1] < rs[2]
+
+    def test_imbalance_zero_for_regular(self):
+        g = regular_graph(2048, 4, seed=0, block_size=256)
+        assert imbalance(g, PAPER_GPU) < 0.05
+
+    def test_imbalance_high_for_powerlaw(self):
+        g = powerlaw_graph(4096, 40000, alpha=1.6, seed=0,
+                           max_degree=2000, block_size=256)
+        assert imbalance(g, PAPER_GPU) > 0.25
