@@ -1,7 +1,10 @@
-"""Fig. 5 reproduction: 6 apps x 6 inputs x design-space configs, measured
+"""Fig. 5 reproduction: apps x inputs x design-space configs, measured
 execution time (converged runs, compile excluded) on the TPU-analogue
 design space.  Static apps: TG0 + push {SG1, SGR, SD1, SDR} (the paper's
-five shown bars); CC: DG1, DGR, DD1, DDR.
+five shown bars); CC: DG1, DGR, DD1, DDR; the frontier traversal apps
+(BFS, SSSP, BC) additionally run the dynamic cells, whose rows report the
+per-iteration direction trace ("S"=push, "T"=pull) the frontier heuristic
+chose — the axis that makes D* cells distinct behaviors, not relabels.
 
 CPU wall-times stand in for the paper's simulated-GPU cycle counts: the
 reproduction claim is qualitative (config rankings vary per workload; no
@@ -19,12 +22,23 @@ from repro.algorithms import REGISTRY
 from repro.core import SystemConfig, run
 from repro.graph.datasets import PAPER_GRAPHS, paper_graph
 
-__all__ = ["run_fig5", "STATIC_SHOWN", "DYNAMIC_SHOWN"]
+__all__ = ["run_fig5", "STATIC_SHOWN", "DYNAMIC_SHOWN", "TRAVERSAL_APPS"]
 
 STATIC_SHOWN = ("TG0", "SG1", "SGR", "SD1", "SDR")
 DYNAMIC_SHOWN = ("DG1", "DGR", "DD1", "DDR")
+#: frontier-protocol apps: run static cells AND the dynamic cells whose
+#: per-iteration direction choice the frontier heuristic drives.
+TRAVERSAL_APPS = ("BFS", "SSSP", "BC")
 SCALE = 32
 REPEATS = 3
+
+
+def _configs_for(app: str):
+    if app == "CC":
+        return DYNAMIC_SHOWN
+    if app in TRAVERSAL_APPS:
+        return STATIC_SHOWN + ("DG1", "DD1")
+    return STATIC_SHOWN
 
 
 def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None):
@@ -35,25 +49,35 @@ def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None):
         for app in apps:
             program = REGISTRY[app]()
             g = paper_graph(gname, scale=scale, weighted=program.weighted)
-            configs = DYNAMIC_SHOWN if app == "CC" else STATIC_SHOWN
+            configs = _configs_for(app)
             row = {}
             for cname in configs:
                 cfg = SystemConfig.from_name(cname)
                 best = float("inf")
                 iters = 0
+                trace = None
                 for rep in range(REPEATS):
                     r = run(program, g, cfg, key=jax.random.key(0))
                     best = min(best, r.seconds)
                     iters = r.iterations
+                    trace = r.direction_trace
                 row[cname] = {"seconds": best, "iterations": iters}
+                if cname.startswith("D") and trace is not None:
+                    row[cname]["directions"] = trace
+                    row[cname]["n_push"] = trace.count("S")
+                    row[cname]["n_pull"] = trace.count("T")
             base = row[configs[0]]["seconds"]
             for cname in configs:
                 row[cname]["normalized"] = row[cname]["seconds"] / base
             best_cfg = min(row, key=lambda c: row[c]["seconds"])
             results[f"{gname}/{app}"] = {"configs": row, "best": best_cfg}
+            dyn = " ".join(f"{c}:{row[c]['directions']}"
+                           for c in configs
+                           if "directions" in row[c])
             print(f"{gname}/{app}: best={best_cfg} "
                   + " ".join(f"{c}={row[c]['seconds']*1e3:.1f}ms"
-                             for c in configs), flush=True)
+                             for c in configs)
+                  + (f" dirs[{dyn}]" if dyn else ""), flush=True)
     Path(out_dir).mkdir(exist_ok=True, parents=True)
     Path(out_dir, "fig5.json").write_text(json.dumps(results, indent=2))
     return results

@@ -38,15 +38,22 @@ def main() -> None:
     print(f"table2_profile,{dt*1e6:.0f},vol_class_match={n_class_ok}/6")
 
     graphs = None if args.full else ["DCT", "RAJ", "OLS", "WNG"]
-    apps = None if args.full else ["PR", "SSSP", "MIS", "CLR", "CC"]
+    apps = None if args.full else ["PR", "SSSP", "BFS", "MIS", "CLR", "CC"]
     t0 = time.perf_counter()
     fig5 = run_fig5(scale=args.scale, graphs=graphs, apps=apps)
     n_cells = len(fig5)
     dt = (time.perf_counter() - t0) / max(n_cells, 1)
     n_best_not_ref = sum(1 for v in fig5.values()
                          if v["best"] not in ("TG0", "DG1"))
+    # dynamic cells whose frontier heuristic used BOTH directions in one
+    # run — the per-iteration switching the D configs exist for
+    n_mixed = sum(
+        1 for v in fig5.values() for c, d in v["configs"].items()
+        if c.startswith("D") and "S" in d.get("directions", "")
+        and "T" in d.get("directions", ""))
     print(f"fig5_sweep,{dt*1e6:.0f},cells={n_cells};"
-          f"best_differs_from_ref={n_best_not_ref}")
+          f"best_differs_from_ref={n_best_not_ref};"
+          f"dyn_mixed_direction_cells={n_mixed}")
 
     t0 = time.perf_counter()
     t5 = run_table5(scale=args.scale)

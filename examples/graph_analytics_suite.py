@@ -11,7 +11,8 @@ import jax
 import numpy as np
 
 from repro.algorithms import REGISTRY
-from repro.algorithms.reference import (cc_np, is_maximal_independent_set,
+from repro.algorithms.reference import (bfs_np, cc_np,
+                                        is_maximal_independent_set,
                                         is_proper_coloring, pagerank_np,
                                         sssp_np)
 from repro.core import run, specialize
@@ -35,6 +36,8 @@ def validate(app, g, res):
             g, np.asarray(res.state["status"]) == 1)
     if app == "CLR":
         return is_proper_coloring(g, np.asarray(res.state["color"]))
+    if app == "BFS":
+        return np.array_equal(np.asarray(res.state["depth"]), bfs_np(g))
     return True  # BC checked in tests (O(V*E) oracle too slow here)
 
 
@@ -56,9 +59,11 @@ def main():
             res = run(program, g, config, key=jax.random.key(0))
             ok = validate(app, g, res)
             n_ok += ok
+            dirs = f" dirs={res.direction_trace}" \
+                if config.name.startswith("D") and res.direction_trace else ""
             print(f"{gname:>4}/{app:<4} -> {config.name}  "
                   f"iters={res.iterations:<4} {res.seconds*1e3:7.1f}ms  "
-                  f"converged={res.converged} valid={ok}")
+                  f"converged={res.converged} valid={ok}{dirs}")
     dt = time.perf_counter() - total_t0
     print(f"\nsuite done: {n_ok} validated, {dt:.1f}s total")
 

@@ -1,5 +1,8 @@
-"""The paper's six applications (Sec. V-B) as VertexPrograms."""
+"""The paper's six applications (Sec. V-B) as VertexPrograms, plus BFS —
+the canonical direction-optimizing traversal exercising the dynamic
+("D") configs' per-iteration push/pull switch."""
 from repro.algorithms.bc import bc
+from repro.algorithms.bfs import bfs
 from repro.algorithms.cc import cc
 from repro.algorithms.coloring import coloring
 from repro.algorithms.mis import mis
@@ -14,6 +17,8 @@ REGISTRY = {
     "CLR": coloring,
     "BC": bc,
     "CC": cc,
+    "BFS": bfs,
 }
 
-__all__ = ["pagerank", "sssp", "mis", "coloring", "bc", "cc", "REGISTRY"]
+__all__ = ["pagerank", "sssp", "mis", "coloring", "bc", "cc", "bfs",
+           "REGISTRY"]

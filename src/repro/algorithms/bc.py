@@ -6,13 +6,19 @@ shortest-path counts sigma, then backward level-by-level dependency
 accumulation  delta[v] = sigma[v] * sum_{w in succ(v)} (1+delta[w])/sigma[w].
 The backward reduce runs over the (symmetric) edge set with exact level
 predicates on both endpoints.
+
+Both stages are frontier phases: forward's frontier is the current BFS
+level (with the unvisited set feeding the alpha test), backward's is the
+level being drained.  Dynamic configs therefore direction-optimize both
+sweeps; static configs constant-fold the choice.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.vertex_program import SUM, EdgePhase, VertexProgram
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, SUM, EdgePhase,
+                                       VertexProgram)
 
 __all__ = ["bc"]
 
@@ -23,6 +29,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
         vprop=lambda st, src, w: st["sigma"][src],
         spred=lambda st, src: st["depth"][src] == st["cur_level"],
         tpred=lambda st, dst: st["depth"][dst] == -1,
+        frontier=lambda st: st["depth"] == st["cur_level"],
     )
     bwd = EdgePhase(
         monoid=SUM,
@@ -30,6 +37,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
         / jnp.maximum(st["sigma"][src], 1e-30),
         spred=lambda st, src: st["depth"][src] == st["cur_level"] + 1,
         tpred=lambda st, dst: st["depth"][dst] == st["cur_level"],
+        frontier=lambda st: st["depth"] == st["cur_level"] + 1,
     )
 
     def init(graph, key=None):
@@ -40,11 +48,15 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
             "delta": jnp.zeros((v,), jnp.float32),
             "cur_level": jnp.int32(0),
             "phase": jnp.int32(0),  # 0 = forward, 1 = backward
+            FRONTIER_DIR_KEY: jnp.asarray(False),
         }
 
     def step(ctx, st, it):
         def forward(st):
-            contrib = ctx.propagate(st, fwd)
+            pull = ctx.choose_direction(fwd.frontier(st),
+                                        st[FRONTIER_DIR_KEY],
+                                        unvisited=st["depth"] == -1)
+            contrib = ctx.propagate_dynamic(st, fwd, pull)
             newly = (st["depth"] == -1) & (contrib > 0)
             depth = jnp.where(newly, st["cur_level"] + 1, st["depth"])
             sigma = jnp.where(newly, contrib, st["sigma"])
@@ -56,14 +68,18 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
                 "phase": jnp.where(any_new, 0, 1).astype(jnp.int32),
                 "cur_level": jnp.where(any_new, st["cur_level"] + 1,
                                        st["cur_level"] - 1).astype(jnp.int32),
+                FRONTIER_DIR_KEY: pull,
             }
 
         def backward(st):
-            red = ctx.propagate(st, bwd)
+            pull = ctx.choose_direction(bwd.frontier(st),
+                                        st[FRONTIER_DIR_KEY])
+            red = ctx.propagate_dynamic(st, bwd, pull)
             hit = st["depth"] == st["cur_level"]
             delta = jnp.where(hit, st["sigma"] * red, st["delta"])
             return {**st, "delta": delta,
-                    "cur_level": (st["cur_level"] - 1).astype(jnp.int32)}
+                    "cur_level": (st["cur_level"] - 1).astype(jnp.int32),
+                    FRONTIER_DIR_KEY: pull}
 
         return jax.lax.cond(st["phase"] == 0, forward, backward, st)
 
@@ -77,4 +93,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
     return VertexProgram(
         name="BC", init=init, step=step, converged=converged,
         extract=extract, weighted=False, max_iters=max_iters,
+        frontier_init=lambda g: jnp.zeros((g.n_nodes,), bool)
+        .at[root].set(True),
+        frontier_update=lambda st: st["depth"] == st["cur_level"],
     )

@@ -1,0 +1,62 @@
+"""Breadth-First Search — the canonical direction-optimizing traversal.
+
+Level-synchronous BFS with the full frontier protocol: each iteration the
+frontier (vertices discovered last level) and the unvisited set feed
+``EdgeContext.choose_direction`` — push (source-outer scatter from the
+frontier) while the frontier is sparse, pull (target-outer scan of
+undiscovered vertices) once the frontier's out-edges outnumber the
+unexplored region's (Beamer's alpha test), and back to push for the
+shrinking tail (beta test).  Under static configs the flag constant-folds
+to the config's direction, so one program covers all 12 cells.
+
+Depths use int32 with -1 for "unvisited"; the MIN monoid over
+``depth[src] + 1`` makes the reduction direction-agnostic (the edge set
+is symmetric and both orders carry the same predicates).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, MIN, EdgePhase,
+                                       VertexProgram)
+
+__all__ = ["bfs"]
+
+_UNSEEN = -1
+
+
+def bfs(source: int = 0, max_iters: int = 4096) -> VertexProgram:
+    phase = EdgePhase(
+        monoid=MIN,
+        vprop=lambda st, src, w: st["depth"][src] + 1,
+        spred=lambda st, src: st["active"][src],          # frontier only
+        tpred=lambda st, dst: st["depth"][dst] == _UNSEEN,
+        frontier=lambda st: st["active"],
+    )
+
+    def init(graph, key=None):
+        v = graph.n_nodes
+        depth = jnp.full((v,), _UNSEEN, jnp.int32).at[source].set(0)
+        active = jnp.zeros((v,), bool).at[source].set(True)
+        return {"depth": depth, "active": active,
+                FRONTIER_DIR_KEY: jnp.asarray(False)}
+
+    def step(ctx, st, it):
+        unvisited = st["depth"] == _UNSEEN
+        pull = ctx.choose_direction(phase.frontier(st), st[FRONTIER_DIR_KEY],
+                                    unvisited=unvisited)
+        cand = ctx.propagate_dynamic(st, phase, pull, dtype=jnp.int32)
+        newly = unvisited & (cand < jnp.iinfo(jnp.int32).max)
+        depth = jnp.where(newly, cand, st["depth"]).astype(jnp.int32)
+        return {"depth": depth, "active": newly, FRONTIER_DIR_KEY: pull}
+
+    def converged(prev, cur):
+        return ~jnp.any(cur["active"])
+
+    return VertexProgram(
+        name="BFS", init=init, step=step, converged=converged,
+        extract=lambda st: st["depth"], weighted=False, max_iters=max_iters,
+        frontier_init=lambda g: jnp.zeros((g.n_nodes,), bool)
+        .at[source].set(True),
+        frontier_update=lambda st: st["active"],
+    )

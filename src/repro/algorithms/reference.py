@@ -5,9 +5,29 @@ import numpy as np
 
 from repro.graph.structure import Graph
 
-__all__ = ["pagerank_np", "sssp_np", "cc_np", "bc_np",
+__all__ = ["pagerank_np", "sssp_np", "cc_np", "bc_np", "bfs_np",
            "is_independent_set", "is_maximal_independent_set",
            "is_proper_coloring"]
+
+
+def bfs_np(g: Graph, source=0):
+    """Level-synchronous BFS depths; -1 for unreachable vertices."""
+    v = g.n_nodes
+    row_ptr = np.asarray(g.row_ptr_out, np.int64)
+    col = np.asarray(g.dst, np.int64)
+    depth = np.full(v, -1, np.int32)
+    depth[source] = 0
+    frontier = [source]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for e in range(row_ptr[u], row_ptr[u + 1]):
+                t = col[e]
+                if depth[t] == -1:
+                    depth[t] = depth[u] + 1
+                    nxt.append(t)
+        frontier = nxt
+    return depth
 
 
 def pagerank_np(g: Graph, damping=0.85, tol=1e-6, max_iters=256):

@@ -1,12 +1,19 @@
 """Single-Source Shortest Path (SSSP) — Table III: static, source control
 (push elides all non-frontier sources in the outer loop), source info.
 Frontier-based Bellman-Ford relaxation with a min monoid.
+
+The frontier (vertices whose distance improved last iteration) drives the
+dynamic configs' per-iteration direction: no monotone "unvisited" set
+exists (re-relaxations can reactivate settled vertices), so the push->pull
+trigger is the frontier-edge-density fallback of
+:func:`repro.core.frontier.choose_direction`.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.vertex_program import MIN, EdgePhase, VertexProgram
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, MIN, EdgePhase,
+                                       VertexProgram)
 
 __all__ = ["sssp"]
 
@@ -16,19 +23,22 @@ def sssp(source: int = 0, max_iters: int = 4096) -> VertexProgram:
         monoid=MIN,
         vprop=lambda st, src, w: st["dist"][src] + w,
         spred=lambda st, src: st["active"][src],  # frontier only
+        frontier=lambda st: st["active"],
     )
 
     def init(graph, key=None):
         v = graph.n_nodes
         dist = jnp.full((v,), jnp.inf, jnp.float32).at[source].set(0.0)
         active = jnp.zeros((v,), bool).at[source].set(True)
-        return {"dist": dist, "active": active}
+        return {"dist": dist, "active": active,
+                FRONTIER_DIR_KEY: jnp.asarray(False)}
 
     def step(ctx, st, it):
-        cand = ctx.propagate(st, phase)
+        pull = ctx.choose_direction(phase.frontier(st), st[FRONTIER_DIR_KEY])
+        cand = ctx.propagate_dynamic(st, phase, pull)
         dist = jnp.minimum(st["dist"], cand)
         active = dist < st["dist"]
-        return {"dist": dist, "active": active}
+        return {"dist": dist, "active": active, FRONTIER_DIR_KEY: pull}
 
     def converged(prev, cur):
         return ~jnp.any(cur["active"])
@@ -36,4 +46,7 @@ def sssp(source: int = 0, max_iters: int = 4096) -> VertexProgram:
     return VertexProgram(
         name="SSSP", init=init, step=step, converged=converged,
         extract=lambda st: st["dist"], weighted=True, max_iters=max_iters,
+        frontier_init=lambda g: jnp.zeros((g.n_nodes,), bool)
+        .at[source].set(True),
+        frontier_update=lambda st: st["active"],
     )

@@ -9,14 +9,23 @@ edge-propagated updates execute.  The config picks:
 - the accumulation locality (coherence: LLC vs owned/VMEM-blocked),
 - the chunking/overlap schedule (consistency: DRF0/DRF1/DRFrlx).
 
-``run`` drives a program to convergence with a jitted, donated step.
+Dynamic (``PUSH_PULL``) configs keep **both** pre-chunked edge orders live
+and resolve the direction per call: frontier-aware programs pass a traced
+boolean to :meth:`EdgeContext.propagate_dynamic` (typically computed by
+:meth:`EdgeContext.choose_direction` from the current frontier), which
+``lax.cond``s between the push and pull realisations inside jit.
+Frontier-less programs fall back to the documented
+:data:`EdgeContext.DEFAULT_DYNAMIC_DIRECTION`.
+
+``run`` drives a program to convergence with a jitted, donated step and
+records the per-iteration direction trace of frontier-aware programs.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +35,9 @@ from repro.core.coherence import segment_reduce, segment_reduce_owned
 from repro.core.config_space import (Coherence, Consistency, SystemConfig,
                                      UpdateProp)
 from repro.core.consistency import scheduled_reduce
-from repro.core.vertex_program import EdgePhase, Monoid, VertexProgram
+from repro.core.frontier import choose_direction
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, EdgePhase, Monoid,
+                                       VertexProgram)
 from repro.graph.structure import Graph
 
 __all__ = ["EdgeContext", "RunResult", "run"]
@@ -44,16 +55,27 @@ def _pad_reshape(arr, n_chunks, fill):
 class EdgeContext:
     """Graph + SystemConfig bound together; reusable across iterations."""
 
+    #: Direction used when a ``PUSH_PULL`` config meets a phase that did
+    #: not resolve one (no frontier, no explicit ``direction=``).  PUSH is
+    #: the safe default: the dynamic configs exist for traversal apps
+    #: whose frontiers start sparse, and source-outer iteration with
+    #: ``spred`` elision does no worse than pull on a sparse frontier
+    #: while avoiding pull's full destination scan.  Frontier-aware
+    #: programs should instead call :meth:`propagate_dynamic`.
+    DEFAULT_DYNAMIC_DIRECTION = UpdateProp.PUSH
+
     def __init__(self, graph: Graph, config: SystemConfig,
                  use_pallas: bool = False):
         self.graph = graph
         self.config = config
         self.use_pallas = use_pallas
         self.n_nodes = graph.n_nodes
+        self.n_edges = graph.n_edges
         g = graph.device_put()
         n_chunks = 1 if config.consistency is Consistency.DRF0 \
             else config.n_chunks
         v = graph.n_nodes
+        self._out_degree = jnp.asarray(g.out_degree)
         # Pre-chunked edge arrays per direction.  Padding edges carry the
         # sentinel id V on both endpoints; they reduce into the extra
         # segment V and contribute the identity regardless.
@@ -63,10 +85,11 @@ class EdgeContext:
                     _pad_reshape(w, n_chunks, 0.0))
 
         self._reducer = None
+        self._pull_reducer = None
         if config.coherence is Coherence.DENOVO:
             so, do, wo = g.edges_owned()
             self._push_edges = chunked(so, do, wo)
-            if use_pallas:
+            if use_pallas and config.prop is not UpdateProp.PULL:
                 from repro.kernels.segment_reduce import \
                     BlockedSegmentReducer
                 self._owned_raw = (so, do, wo)
@@ -76,36 +99,104 @@ class EdgeContext:
         else:
             self._push_edges = chunked(g.src, g.dst, g.weight)
         self._pull_edges = chunked(g.src_in, g.dst_in, g.weight_in)
+        # each reducer's host-side tiling plan walks the full edge set, so
+        # only build the directions this config can actually execute
+        if use_pallas and config.prop is not UpdateProp.PUSH:
+            # Pull-side Pallas fast path: the by-dst (CSC) edge order is
+            # already dst-block-binned (sorted dst => contiguous blocks),
+            # so the blocked reducer applies to *both* coherences — pull
+            # has no atomics for ownership to specialize away.
+            from repro.kernels.segment_reduce import BlockedSegmentReducer
+            din = np.asarray(graph.dst_in, np.int64)
+            # per-block edge offsets are just row_ptr_in sampled at block
+            # boundaries — no need to re-bin the edge set
+            bounds = np.minimum(
+                np.arange(graph.n_blocks + 1) * graph.block_size, v)
+            pull_ptr = np.asarray(graph.row_ptr_in, np.int64)[bounds]
+            self._pull_raw = (g.src_in, g.dst_in, g.weight_in)
+            self._pull_reducer = BlockedSegmentReducer(
+                din, pull_ptr, num_segments=v,
+                block_size=graph.block_size)
         self.n_chunks = n_chunks
+
+    # ------------------------------------------------------------------
+    def resolve_direction(self,
+                          direction: Optional[UpdateProp] = None) -> UpdateProp:
+        """Resolve a per-phase direction to a concrete PUSH or PULL.
+
+        Precedence: explicit ``direction`` argument > the config's static
+        direction > :data:`DEFAULT_DYNAMIC_DIRECTION` for ``PUSH_PULL``
+        configs whose caller resolved nothing.
+        """
+        direction = direction or self.config.prop
+        if direction is UpdateProp.PUSH_PULL:
+            direction = self.DEFAULT_DYNAMIC_DIRECTION
+        return direction
+
+    def choose_direction(self, frontier: jnp.ndarray, prev_pull,
+                         unvisited: Optional[jnp.ndarray] = None
+                         ) -> jnp.ndarray:
+        """Traced bool (True=pull) for this iteration's edge direction.
+
+        Static configs return their fixed direction as a constant, so
+        frontier-aware programs can call this unconditionally and stay
+        correct (and recompile-free) across the whole design space.
+        """
+        prop = self.config.prop
+        if prop is not UpdateProp.PUSH_PULL:
+            return jnp.asarray(prop is UpdateProp.PULL)
+        return choose_direction(frontier, self._out_degree, self.n_edges,
+                                self.n_nodes, prev_pull, unvisited=unvisited)
 
     # ------------------------------------------------------------------
     def propagate(self, state, phase: EdgePhase,
                   direction: Optional[UpdateProp] = None,
                   dtype=jnp.float32) -> jnp.ndarray:
         """Execute one edge-propagated reduction; returns [V] reduced."""
+        return self._propagate(state, phase, self.resolve_direction(direction),
+                               dtype)
+
+    def propagate_dynamic(self, state, phase: EdgePhase, pull,
+                          dtype=jnp.float32) -> jnp.ndarray:
+        """Like ``propagate`` but direction is a traced bool (True=pull).
+
+        Under a static config the flag is ignored (the config's direction
+        wins and only one branch is compiled); under ``PUSH_PULL`` both
+        pre-chunked edge orders are traced and ``lax.cond`` executes
+        exactly one per iteration — the paper's dynamic mode.
+        """
+        if self.config.prop is not UpdateProp.PUSH_PULL:
+            return self._propagate(state, phase,
+                                   self.resolve_direction(None), dtype)
+        return jax.lax.cond(
+            jnp.asarray(pull, bool),
+            lambda st: self._propagate(st, phase, UpdateProp.PULL, dtype),
+            lambda st: self._propagate(st, phase, UpdateProp.PUSH, dtype),
+            state)
+
+    def _propagate(self, state, phase: EdgePhase, direction: UpdateProp,
+                   dtype) -> jnp.ndarray:
         cfg = self.config
-        direction = direction or cfg.prop
-        if direction is UpdateProp.PUSH_PULL:
-            direction = UpdateProp.PUSH  # dynamic apps pick per call-site
         pull = direction is UpdateProp.PULL
         src_c, dst_c, w_c = self._pull_edges if pull else self._push_edges
         v = self.n_nodes
         monoid = phase.monoid
         ident = monoid.identity(dtype)
 
-        if self._reducer is not None and not pull:
-            # Pallas owned-block kernel: the whole (unpadded) edge set in
-            # owned order; masked edges contribute the monoid identity,
+        reducer = self._pull_reducer if pull else self._reducer
+        if reducer is not None:
+            # Pallas blocked kernel over the whole (unpadded) edge set in
+            # block-binned order (owned order for push, CSC order for
+            # pull); masked edges contribute the monoid identity,
             # kernel-internal DMA pipelining plays the consistency role.
-            so, do, wo = self._owned_raw
+            so, do, wo = self._pull_raw if pull else self._owned_raw
             mask = jnp.ones(so.shape, bool)
             if phase.spred is not None:
                 mask &= phase.spred(state, so)
             if phase.tpred is not None:
                 mask &= phase.tpred(state, do)
             msg = phase.vprop(state, so, wo).astype(dtype)
-            msg = jnp.where(mask, msg, ident)
-            return self._reducer.reduce(msg, monoid.name)
+            return reducer.masked(msg, mask, monoid.name, ident=ident)
 
         def chunk_reduce(i):
             src = jax.lax.dynamic_index_in_dim(src_c, i, keepdims=False)
@@ -120,12 +211,16 @@ class EdgeContext:
                 mask &= phase.tpred(state, tv)
             msg = phase.vprop(state, sv, w).astype(dtype)
             msg = jnp.where(mask, msg, ident)
-            ids = jnp.where(mask, dst, v)
             if pull:
                 # by-dst order: sorted ids -> dense local (non-atomic)
-                # update (chunks of a sorted array stay sorted)
-                return segment_reduce(msg, ids, v + 1, monoid,
+                # update (chunks of a sorted array stay sorted).  Keep
+                # ids = dst — rewriting masked ids to the sentinel would
+                # break the sorted invariant the flag asserts; masked
+                # edges already carry the identity, which no-ops in the
+                # combine, and padding edges carry dst = v themselves.
+                return segment_reduce(msg, dst, v + 1, monoid,
                                       indices_are_sorted=True)
+            ids = jnp.where(mask, dst, v)
             if cfg.coherence is Coherence.DENOVO:
                 return segment_reduce_owned(msg, ids, v + 1, monoid)
             return segment_reduce(msg, ids, v + 1, monoid)
@@ -141,6 +236,9 @@ class RunResult:
     iterations: int
     seconds: float
     converged: bool
+    #: per-iteration edge-direction letters ("S"=push, "T"=pull) for
+    #: frontier-aware programs; None for programs without the protocol.
+    direction_trace: Optional[str] = None
 
     def extract(self, program: VertexProgram):
         return program.extract(self.state)
@@ -165,14 +263,23 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
         # `step` donates its input, so warm the jit cache on a copy.
         copy = jax.tree.map(lambda x: x.copy(), state)
         jax.block_until_ready(step(copy, jnp.int32(0)))
+    # direction tracing is part of the frontier protocol: the program
+    # declares itself frontier-aware via frontier_update and records its
+    # per-iteration choice under FRONTIER_DIR_KEY
+    traced = (program.frontier_update is not None
+              and isinstance(state, dict) and FRONTIER_DIR_KEY in state)
+    trace: List[str] = []
     t0 = time.perf_counter()
     it, done = 0, False
     while it < limit:
         state, done_dev = step(state, jnp.int32(it))
         it += 1
         done = bool(done_dev)
+        if traced:
+            trace.append("T" if bool(state[FRONTIER_DIR_KEY]) else "S")
         if done:
             break
     jax.block_until_ready(state)
     dt = time.perf_counter() - t0
-    return RunResult(state=state, iterations=it, seconds=dt, converged=done)
+    return RunResult(state=state, iterations=it, seconds=dt, converged=done,
+                     direction_trace="".join(trace) if traced else None)

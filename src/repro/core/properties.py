@@ -40,4 +40,8 @@ TABLE_III = {
     "CLR": AlgorithmicProperties(Traversal.STATIC, Locus.SYMMETRIC, Locus.TARGET),
     "BC": AlgorithmicProperties(Traversal.STATIC, Locus.SOURCE, Locus.SYMMETRIC),
     "CC": AlgorithmicProperties(Traversal.DYNAMIC, Locus.NA, Locus.NA),
+    # Not in the paper's Table III: direction-optimizing BFS picks its
+    # source/target direction per iteration from frontier occupancy —
+    # dynamic traversal, so the model maps it to the DD1 cell.
+    "BFS": AlgorithmicProperties(Traversal.DYNAMIC, Locus.NA, Locus.NA),
 }

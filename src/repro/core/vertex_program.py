@@ -17,9 +17,15 @@ import jax.numpy as jnp
 
 from repro.core.properties import TABLE_III, AlgorithmicProperties
 
-__all__ = ["Monoid", "SUM", "MIN", "MAX", "EdgePhase", "VertexProgram"]
+__all__ = ["Monoid", "SUM", "MIN", "MAX", "EdgePhase", "VertexProgram",
+           "FRONTIER_DIR_KEY"]
 
 State = dict  # str -> jnp.ndarray pytree
+
+#: State key under which frontier-aware programs record the direction
+#: their step chose (bool scalar, True=pull).  ``run`` reads it back per
+#: iteration to build :attr:`RunResult.direction_trace`.
+FRONTIER_DIR_KEY = "pull"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,16 +68,39 @@ class EdgePhase:
     ``spred(state, src_ids)`` / ``tpred(state, dst_ids)`` — algorithmic
     control.  Edges failing either predicate contribute the monoid
     identity (work elision happens at trace level per direction).
+
+    ``frontier(state) -> [V] bool`` — optional frontier protocol: the
+    source-side frontier mask driving this phase, fed to
+    ``EdgeContext.choose_direction`` by dynamic (``PUSH_PULL``) configs
+    to pick push vs. pull per iteration.  ``None`` marks a frontier-less
+    phase, which dynamic configs run in the context's documented default
+    direction.
     """
     monoid: Monoid
     vprop: Callable[[State, jnp.ndarray, jnp.ndarray], jnp.ndarray]
     spred: Optional[Callable[[State, jnp.ndarray], jnp.ndarray]] = None
     tpred: Optional[Callable[[State, jnp.ndarray], jnp.ndarray]] = None
+    frontier: Optional[Callable[[State], jnp.ndarray]] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class VertexProgram:
-    """A graph algorithm: state init, per-iteration step, convergence."""
+    """A graph algorithm: state init, per-iteration step, convergence.
+
+    Frontier protocol (optional): traversal-flavoured programs set
+    ``frontier_init`` (initial [V] bool mask from the graph) and
+    ``frontier_update`` (current mask extracted from state) and record
+    the direction their step chose under :data:`FRONTIER_DIR_KEY`.
+    ``frontier_update is not None`` is how ``run`` recognises a
+    frontier-aware program (gating the per-iteration direction trace it
+    reads from :data:`FRONTIER_DIR_KEY`); both extractors give harnesses
+    and tests mask access without knowing each program's state layout.
+    The direction *choice* itself happens inside ``step`` — programs
+    call ``ctx.choose_direction`` on their phase's ``frontier`` mask and
+    pass the result to ``ctx.propagate_dynamic``.  Frontier-less
+    programs leave everything ``None`` and execute dynamic configs in
+    the context's default direction.
+    """
     name: str
     init: Callable[..., State]                     # (graph[, key]) -> state
     step: Callable[..., State]                     # (ctx, state, it) -> state
@@ -79,6 +108,8 @@ class VertexProgram:
     extract: Callable[[State], Any]
     weighted: bool = False
     max_iters: int = 1024
+    frontier_init: Optional[Callable[..., jnp.ndarray]] = None  # (graph)
+    frontier_update: Optional[Callable[[State], jnp.ndarray]] = None
 
     @property
     def properties(self) -> AlgorithmicProperties:

@@ -86,3 +86,28 @@ class BlockedSegmentReducer:
 
     def reduce(self, values: jnp.ndarray, kind: str) -> jnp.ndarray:
         return getattr(self, kind)(values)
+
+    @staticmethod
+    def identity(kind: str, dtype) -> jnp.ndarray:
+        """The monoid identity this reducer assumes for ``kind``."""
+        dtype = jnp.dtype(dtype)
+        if kind == "sum":
+            return jnp.zeros((), dtype)
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.array(jnp.inf if kind == "min" else -jnp.inf, dtype)
+        info = jnp.iinfo(dtype)
+        return jnp.array(info.max if kind == "min" else info.min, dtype)
+
+    def masked(self, values: jnp.ndarray, mask: jnp.ndarray,
+               kind: str, ident=None) -> jnp.ndarray:
+        """Reduce with an [E] edge mask: masked-out edges contribute the
+        identity.  This is the predicate (``spred``/``tpred``) entry
+        point for both the push/owned and the pull/CSC fast paths.
+        Callers already holding their monoid's identity (the executor's
+        ``Monoid.identity``) pass it via ``ident`` so the two
+        definitions can't drift."""
+        if ident is None:
+            ident = self.identity(kind, values.dtype)
+        if values.ndim == mask.ndim + 1:
+            mask = mask[..., None]
+        return self.reduce(jnp.where(mask, values, ident), kind)

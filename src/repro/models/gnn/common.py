@@ -37,8 +37,9 @@ def constrain_flat(x):
     is active (dry-run / production); no-op on a single device.  Without
     this, GSPMD replicates the [N, ...] node state per device —
     catastrophic at ogb_products scale (§Perf C1)."""
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or am.empty or not am.axis_names:
+    from repro.models.mesh_compat import active_abstract_mesh
+    am = active_abstract_mesh()
+    if am is None or not am.axis_names:
         return x
     from jax.sharding import PartitionSpec as P
     spec = P(tuple(am.axis_names), *([None] * (x.ndim - 1)))

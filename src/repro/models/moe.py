@@ -143,9 +143,8 @@ def moe_apply(p, x: jnp.ndarray, cfg: MoEConfig):
 
     shard_ctx = None
     if cfg.tp_axis is not None and g > 1:
-        amesh = jax.sharding.get_abstract_mesh()
-        if amesh is not None and not amesh.empty:
-            shard_ctx = amesh
+        from repro.models.mesh_compat import active_abstract_mesh
+        shard_ctx = active_abstract_mesh()
     from jax.sharding import PartitionSpec as P
     dp = tuple(cfg.dp_axes) or None
     if shard_ctx is not None:

@@ -1,0 +1,87 @@
+"""Hypothesis when importable, a deterministic fallback otherwise.
+
+Test modules import ``given``/``settings``/``st`` from here instead of
+from ``hypothesis`` so the tier-1 suite collects and runs in a bare
+environment.  The fallback is *not* a property-testing engine — it simply
+replays ``max_examples`` seeded draws from each strategy (seeded by the
+test's qualified name, so failures reproduce), with no shrinking and no
+example database.  Install ``hypothesis`` (see requirements-dev.txt) to
+get the real thing; nothing else changes.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import zlib
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _strategies:
+        """The (small) subset of hypothesis.strategies this repo uses."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kwargs):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    st = _strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kwargs):
+        """Accepts (and mostly ignores) hypothesis.settings kwargs."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # No functools.wraps: copying __wrapped__ would let pytest
+            # see the strategy parameters and demand fixtures for them.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(*args, *(s.example(rng) for s in strategies),
+                       **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._shim_max_examples = getattr(
+                fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            return wrapper
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

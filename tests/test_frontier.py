@@ -1,0 +1,178 @@
+"""Frontier subsystem: direction heuristic units, the 12-config
+correctness matrix for the traversal apps, and the dynamic-direction
+trace the acceptance of the 'D' configs hinges on."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import bc, bfs, sssp
+from repro.algorithms.reference import bc_np, bfs_np, sssp_np
+from repro.core import ALL_CONFIGS, EdgeContext, SystemConfig, run
+from repro.core.frontier import (ALPHA, BETA, choose_direction,
+                                 dense_to_sparse, frontier_density,
+                                 frontier_edges, frontier_size,
+                                 sparse_to_dense)
+from repro.graph import powerlaw_graph, random_graph
+
+CONFIG_NAMES = [c.name for c in ALL_CONFIGS]
+
+
+@pytest.fixture(scope="module")
+def rand_g():
+    return random_graph(64, 400, seed=0, weighted=True, block_size=32)
+
+
+@pytest.fixture(scope="module")
+def sf_g():
+    return powerlaw_graph(200, 1500, alpha=1.2, seed=1, weighted=True,
+                          block_size=32)
+
+
+class TestHeuristic:
+    def _uniform(self, v=100, deg=4):
+        return jnp.full((v,), deg, jnp.int32), v * deg, v
+
+    def test_sparse_frontier_pushes(self):
+        out_deg, e, v = self._uniform()
+        mask = jnp.zeros((v,), bool).at[0].set(True)
+        assert not bool(choose_direction(mask, out_deg, e, v, False))
+
+    def test_dense_frontier_pulls(self):
+        out_deg, e, v = self._uniform()
+        mask = jnp.ones((v,), bool)
+        assert bool(choose_direction(mask, out_deg, e, v, False))
+
+    def test_flips_exactly_at_density_threshold(self):
+        """push->pull fires when m_f * ALPHA first exceeds |E|."""
+        out_deg, e, v = self._uniform()
+        thresh = int(e // (4 * ALPHA))  # frontier vertices at the boundary
+        below = jnp.arange(v) < thresh
+        above = jnp.arange(v) < thresh + 1
+        assert not bool(choose_direction(below, out_deg, e, v, False))
+        assert bool(choose_direction(above, out_deg, e, v, False))
+
+    def test_hysteresis_pull_sticks_until_beta(self):
+        out_deg, e, v = self._uniform()
+        # inside the hysteresis band: above V/BETA vertices but below the
+        # |E|/ALPHA out-edge trigger, so neither switch fires
+        mid = jnp.arange(v) < 6
+        tail = jnp.arange(v) < max(1, int(v / BETA) - 1)
+        # while pulling, a mid-size frontier keeps pulling...
+        assert bool(choose_direction(mid, out_deg, e, v, True))
+        # ...but the same frontier from push stays push (no oscillation)
+        assert not bool(choose_direction(mid, out_deg, e, v, False))
+        # and the shrunk tail flips back to push
+        assert not bool(choose_direction(tail, out_deg, e, v, True))
+
+    def test_unvisited_variant_compares_frontiers(self):
+        out_deg, e, v = self._uniform()
+        half = jnp.arange(v) < v // 2
+        none = jnp.zeros((v,), bool)
+        # m_f = m_u/1 > m_u/ALPHA -> pull, even though density is only 0.5
+        assert bool(choose_direction(half, out_deg, e, v, False,
+                                     unvisited=~half))
+        # nothing left to discover -> m_f * ALPHA > 0 -> pull (scan ends it)
+        assert bool(choose_direction(half, out_deg, e, v, False,
+                                     unvisited=none))
+
+    def test_static_configs_constant_fold(self, rand_g):
+        mask = jnp.ones((rand_g.n_nodes,), bool)
+        push_ctx = EdgeContext(rand_g, SystemConfig.from_name("SG1"))
+        pull_ctx = EdgeContext(rand_g, SystemConfig.from_name("TG0"))
+        assert not bool(push_ctx.choose_direction(mask, False))
+        assert bool(pull_ctx.choose_direction(mask, True))
+
+    def test_measures(self):
+        out_deg = jnp.asarray([1, 2, 3, 4], jnp.int32)
+        mask = jnp.asarray([True, False, True, False])
+        assert int(frontier_size(mask)) == 2
+        assert int(frontier_edges(mask, out_deg)) == 4
+        assert float(frontier_density(mask, out_deg, 10)) == pytest.approx(0.4)
+
+    def test_sparse_dense_roundtrip(self):
+        mask = jnp.asarray([False, True, False, True, True])
+        ids = dense_to_sparse(mask, capacity=5)
+        assert set(np.asarray(ids).tolist()) == {1, 3, 4, -1}
+        back = sparse_to_dense(ids, 5)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+
+
+class TestConfigMatrix:
+    """All 12 cells of the design space (the now-real D* included) agree
+    with the numpy oracles for every traversal app."""
+
+    @pytest.mark.parametrize("cfg", CONFIG_NAMES)
+    def test_bfs(self, rand_g, cfg):
+        r = run(bfs(), rand_g, SystemConfig.from_name(cfg))
+        np.testing.assert_array_equal(np.asarray(r.state["depth"]),
+                                      bfs_np(rand_g))
+
+    @pytest.mark.parametrize("cfg", CONFIG_NAMES)
+    def test_sssp(self, rand_g, cfg):
+        r = run(sssp(), rand_g, SystemConfig.from_name(cfg))
+        got = np.asarray(r.state["dist"])
+        ref = sssp_np(rand_g)
+        mask = np.isfinite(ref)
+        np.testing.assert_allclose(got[mask], ref[mask], atol=1e-4)
+        assert np.array_equal(np.isfinite(got), mask)
+
+    @pytest.mark.parametrize("cfg", CONFIG_NAMES)
+    def test_bc(self, rand_g, cfg):
+        r = run(bc(), rand_g, SystemConfig.from_name(cfg))
+        np.testing.assert_allclose(np.asarray(r.extract(bc())),
+                                   bc_np(rand_g), rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("cfg", ["DD1", "DGR", "TG0", "SGR"])
+    def test_bfs_scale_free(self, sf_g, cfg):
+        r = run(bfs(), sf_g, SystemConfig.from_name(cfg))
+        np.testing.assert_array_equal(np.asarray(r.state["depth"]),
+                                      bfs_np(sf_g))
+
+
+class TestDirectionTrace:
+    def test_bfs_switches_both_ways(self, sf_g):
+        """Acceptance: a DD1 BFS on a scale-free graph genuinely runs
+        >=1 push-phase and >=1 pull-phase iteration."""
+        r = run(bfs(), sf_g, SystemConfig.from_name("DD1"))
+        assert r.direction_trace is not None
+        assert "S" in r.direction_trace and "T" in r.direction_trace
+        assert len(r.direction_trace) == r.iterations
+
+    def test_static_configs_never_switch(self, sf_g):
+        push = run(bfs(), sf_g, SystemConfig.from_name("SG1"))
+        pull = run(bfs(), sf_g, SystemConfig.from_name("TG0"))
+        assert set(push.direction_trace) == {"S"}
+        assert set(pull.direction_trace) == {"T"}
+
+    def test_frontierless_program_has_no_trace(self, sf_g):
+        from repro.algorithms import pagerank
+        r = run(pagerank(), sf_g, SystemConfig.from_name("SG1"),
+                max_iters=3)
+        assert r.direction_trace is None
+
+    def test_frontier_protocol_fields(self, sf_g):
+        prog = bfs(source=7)
+        init_mask = np.asarray(prog.frontier_init(sf_g))
+        assert init_mask.sum() == 1 and init_mask[7]
+        st = prog.init(sf_g)
+        np.testing.assert_array_equal(
+            np.asarray(prog.frontier_update(st)), init_mask)
+
+    def test_pallas_dynamic_path(self, sf_g):
+        r = run(bfs(), sf_g, SystemConfig.from_name("DD1"), use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(r.state["depth"]),
+                                      bfs_np(sf_g))
+        assert "S" in r.direction_trace and "T" in r.direction_trace
+
+
+@pytest.mark.slow
+class TestFig5Sweep:
+    """Opt-in (-m slow): the benchmark-scale Fig. 5 sweep end-to-end."""
+
+    def test_traversal_cells_report_directions(self, tmp_path):
+        from benchmarks.fig5 import run_fig5
+        res = run_fig5(out_dir=str(tmp_path), scale=16, apps=["BFS"],
+                       graphs=["DCT"])
+        row = res["DCT/BFS"]["configs"]
+        assert any(c.startswith("D") and row[c].get("directions")
+                   for c in row)

@@ -2,8 +2,7 @@
 and the executor design-space equivalence property."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import ALL_CONFIGS, STATIC_CONFIGS, SystemConfig, run
 from repro.graph import (Graph, graph_stats, powerlaw_graph, random_graph,

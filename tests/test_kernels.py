@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.embedding_bag import embedding_bag_pallas, embedding_bag_ref
 from repro.kernels.flash_attention import flash_attention, gqa_ref
@@ -49,6 +48,42 @@ class TestSegmentReduce:
         got = np.asarray(red.min(vals))
         ref = np.asarray(segment_min_ref(vals, jnp.asarray(ids), 200))
         np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("kind", ["sum", "min", "max"])
+    def test_masked_matches_filtered_oracle(self, kind):
+        """masked() == reducing only the surviving edges: the predicate
+        entry point used by both the push/owned and pull/CSC paths."""
+        rng = np.random.default_rng(42)
+        e, v, b = 800, 256, 64
+        ids, bp = _binned(rng, e, v, b)
+        vals = rng.standard_normal(e).astype(np.float32)
+        mask = rng.random(e) < 0.6
+        red = BlockedSegmentReducer(ids, bp, v, b)
+        got = np.asarray(red.masked(jnp.asarray(vals), jnp.asarray(mask),
+                                    kind))
+        ident = float(BlockedSegmentReducer.identity(kind, np.float32))
+        ref_fn = {"sum": segment_sum_ref, "min": segment_min_ref,
+                  "max": segment_max_ref}[kind]
+        ref = np.asarray(ref_fn(jnp.where(jnp.asarray(mask),
+                                          jnp.asarray(vals), ident),
+                                jnp.asarray(ids), v))
+        np.testing.assert_allclose(got, ref, atol=1e-4)
+
+    def test_pull_order_sorted_ids(self):
+        """CSC (sorted-dst) edge order is trivially block-binned — the
+        pull-side fast path needs no extra permutation."""
+        rng = np.random.default_rng(7)
+        e, v, b = 600, 128, 32
+        ids = np.sort(rng.integers(0, v, e))
+        bp = np.zeros(v // b + 1, np.int64)
+        np.add.at(bp, ids // b + 1, 1)
+        bp = np.cumsum(bp)
+        vals = rng.standard_normal(e).astype(np.float32)
+        red = BlockedSegmentReducer(ids, bp, v, b)
+        got = np.asarray(red.sum(jnp.asarray(vals)))
+        ref = np.asarray(segment_sum_ref(jnp.asarray(vals),
+                                         jnp.asarray(ids), v))
+        np.testing.assert_allclose(got, ref, atol=1e-4)
 
     @given(st.integers(1, 2000), st.integers(16, 400), st.integers(0, 3))
     @settings(max_examples=8, deadline=None)

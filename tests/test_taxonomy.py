@@ -1,8 +1,7 @@
 """Eqs. 1-7 + Table II faithfulness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.taxonomy import (PAPER_GPU, classify_volume_kb, imbalance,
                                  profile_graph, reuse, reuse_from_an,
