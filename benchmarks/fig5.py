@@ -4,7 +4,13 @@ design space.  Static apps: TG0 + push {SG1, SGR, SD1, SDR} (the paper's
 five shown bars); CC: DG1, DGR, DD1, DDR; the frontier traversal apps
 (BFS, SSSP, BC) additionally run the dynamic cells, whose rows report the
 per-iteration direction trace ("S"=push, "T"=pull) the frontier heuristic
-chose — the axis that makes D* cells distinct behaviors, not relabels.
+chose — the axis that makes D* cells distinct behaviors, not relabels —
+plus the sparse-gather residency: how many push iterations ran the
+O(m_f) frontier-gathered path (``n_sparse``) and at what mean occupancy
+of the static gather capacity (``mean_sparse_occupancy``).  A dynamic
+cell whose sparse iterations show low occupancy is doing a small
+fraction of the dense path's edge work — the speedup the D configs
+exist for.
 
 CPU wall-times stand in for the paper's simulated-GPU cycle counts: the
 reproduction claim is qualitative (config rankings vary per workload; no
@@ -54,18 +60,25 @@ def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None):
             for cname in configs:
                 cfg = SystemConfig.from_name(cname)
                 best = float("inf")
-                iters = 0
-                trace = None
+                res = None
                 for rep in range(REPEATS):
                     r = run(program, g, cfg, key=jax.random.key(0))
                     best = min(best, r.seconds)
-                    iters = r.iterations
-                    trace = r.direction_trace
-                row[cname] = {"seconds": best, "iterations": iters}
-                if cname.startswith("D") and trace is not None:
+                    res = r
+                row[cname] = {"seconds": best,
+                              "iterations": res.iterations}
+                if cname.startswith("D") and res.direction_trace is not None:
+                    trace = res.direction_trace
                     row[cname]["directions"] = trace
                     row[cname]["n_push"] = trace.count("S")
                     row[cname]["n_pull"] = trace.count("T")
+                    if res.occupancy_trace is not None:
+                        row[cname]["n_sparse"] = res.sparse_iterations
+                        row[cname]["n_dense"] = (res.iterations
+                                                 - res.sparse_iterations)
+                        occ = res.mean_sparse_occupancy
+                        row[cname]["mean_sparse_occupancy"] = (
+                            round(occ, 4) if occ is not None else None)
             base = row[configs[0]]["seconds"]
             for cname in configs:
                 row[cname]["normalized"] = row[cname]["seconds"] / base
@@ -74,10 +87,16 @@ def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None):
             dyn = " ".join(f"{c}:{row[c]['directions']}"
                            for c in configs
                            if "directions" in row[c])
+            occ = " ".join(
+                f"{c}:{row[c]['n_sparse']}/{row[c]['iterations']}"
+                f"@{row[c]['mean_sparse_occupancy']}"
+                for c in configs
+                if row[c].get("n_sparse"))  # 0 sparse iters: nothing to show
             print(f"{gname}/{app}: best={best_cfg} "
                   + " ".join(f"{c}={row[c]['seconds']*1e3:.1f}ms"
                              for c in configs)
-                  + (f" dirs[{dyn}]" if dyn else ""), flush=True)
+                  + (f" dirs[{dyn}]" if dyn else "")
+                  + (f" sparse[{occ}]" if occ else ""), flush=True)
     Path(out_dir).mkdir(exist_ok=True, parents=True)
     Path(out_dir, "fig5.json").write_text(json.dumps(results, indent=2))
     return results

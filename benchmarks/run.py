@@ -51,9 +51,15 @@ def main() -> None:
         1 for v in fig5.values() for c, d in v["configs"].items()
         if c.startswith("D") and "S" in d.get("directions", "")
         and "T" in d.get("directions", ""))
+    # dynamic cells where >=1 push iteration ran the O(m_f) sparse-
+    # gathered path instead of the dense O(E) masked scan
+    n_sparse_cells = sum(
+        1 for v in fig5.values() for c, d in v["configs"].items()
+        if c.startswith("D") and d.get("n_sparse", 0))
     print(f"fig5_sweep,{dt*1e6:.0f},cells={n_cells};"
           f"best_differs_from_ref={n_best_not_ref};"
-          f"dyn_mixed_direction_cells={n_mixed}")
+          f"dyn_mixed_direction_cells={n_mixed};"
+          f"dyn_sparse_gather_cells={n_sparse_cells}")
 
     t0 = time.perf_counter()
     t5 = run_table5(scale=args.scale)

@@ -17,8 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.vertex_program import (FRONTIER_DIR_KEY, SUM, EdgePhase,
-                                       VertexProgram)
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       SUM, EdgePhase, VertexProgram)
 
 __all__ = ["bc"]
 
@@ -30,6 +30,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
         spred=lambda st, src: st["depth"][src] == st["cur_level"],
         tpred=lambda st, dst: st["depth"][dst] == -1,
         frontier=lambda st: st["depth"] == st["cur_level"],
+        gatherable=True,  # spred == frontier membership
     )
     bwd = EdgePhase(
         monoid=SUM,
@@ -38,6 +39,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
         spred=lambda st, src: st["depth"][src] == st["cur_level"] + 1,
         tpred=lambda st, dst: st["depth"][dst] == st["cur_level"],
         frontier=lambda st: st["depth"] == st["cur_level"] + 1,
+        gatherable=True,  # spred == frontier membership
     )
 
     def init(graph, key=None):
@@ -49,6 +51,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
             "cur_level": jnp.int32(0),
             "phase": jnp.int32(0),  # 0 = forward, 1 = backward
             FRONTIER_DIR_KEY: jnp.asarray(False),
+            FRONTIER_OCC_KEY: jnp.float32(-1.0),
         }
 
     def step(ctx, st, it):
@@ -56,7 +59,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
             pull = ctx.choose_direction(fwd.frontier(st),
                                         st[FRONTIER_DIR_KEY],
                                         unvisited=st["depth"] == -1)
-            contrib = ctx.propagate_dynamic(st, fwd, pull)
+            contrib, occ = ctx.propagate_sparse(st, fwd, pull)
             newly = (st["depth"] == -1) & (contrib > 0)
             depth = jnp.where(newly, st["cur_level"] + 1, st["depth"])
             sigma = jnp.where(newly, contrib, st["sigma"])
@@ -69,17 +72,19 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
                 "cur_level": jnp.where(any_new, st["cur_level"] + 1,
                                        st["cur_level"] - 1).astype(jnp.int32),
                 FRONTIER_DIR_KEY: pull,
+                FRONTIER_OCC_KEY: occ,
             }
 
         def backward(st):
             pull = ctx.choose_direction(bwd.frontier(st),
                                         st[FRONTIER_DIR_KEY])
-            red = ctx.propagate_dynamic(st, bwd, pull)
+            red, occ = ctx.propagate_sparse(st, bwd, pull)
             hit = st["depth"] == st["cur_level"]
             delta = jnp.where(hit, st["sigma"] * red, st["delta"])
             return {**st, "delta": delta,
                     "cur_level": (st["cur_level"] - 1).astype(jnp.int32),
-                    FRONTIER_DIR_KEY: pull}
+                    FRONTIER_DIR_KEY: pull,
+                    FRONTIER_OCC_KEY: occ}
 
         return jax.lax.cond(st["phase"] == 0, forward, backward, st)
 

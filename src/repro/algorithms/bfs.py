@@ -9,6 +9,12 @@ unexplored region's (Beamer's alpha test), and back to push for the
 shrinking tail (beta test).  Under static configs the flag constant-folds
 to the config's direction, so one program covers all 12 cells.
 
+Sparse push iterations go through ``ctx.propagate_sparse``: when the
+frontier's gathered edge list fits the context's static capacity, the
+reduction runs over exactly those O(m_f) edges instead of scanning all E
+under a mask; the per-iteration occupancy lands in the state under
+``FRONTIER_OCC_KEY`` (-1 marks a dense iteration).
+
 Depths use int32 with -1 for "unvisited"; the MIN monoid over
 ``depth[src] + 1`` makes the reduction direction-agnostic (the edge set
 is symmetric and both orders carry the same predicates).
@@ -17,8 +23,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.vertex_program import (FRONTIER_DIR_KEY, MIN, EdgePhase,
-                                       VertexProgram)
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       MIN, EdgePhase, VertexProgram)
 
 __all__ = ["bfs"]
 
@@ -32,6 +38,7 @@ def bfs(source: int = 0, max_iters: int = 4096) -> VertexProgram:
         spred=lambda st, src: st["active"][src],          # frontier only
         tpred=lambda st, dst: st["depth"][dst] == _UNSEEN,
         frontier=lambda st: st["active"],
+        gatherable=True,  # spred == frontier membership
     )
 
     def init(graph, key=None):
@@ -39,16 +46,18 @@ def bfs(source: int = 0, max_iters: int = 4096) -> VertexProgram:
         depth = jnp.full((v,), _UNSEEN, jnp.int32).at[source].set(0)
         active = jnp.zeros((v,), bool).at[source].set(True)
         return {"depth": depth, "active": active,
-                FRONTIER_DIR_KEY: jnp.asarray(False)}
+                FRONTIER_DIR_KEY: jnp.asarray(False),
+                FRONTIER_OCC_KEY: jnp.float32(-1.0)}
 
     def step(ctx, st, it):
         unvisited = st["depth"] == _UNSEEN
         pull = ctx.choose_direction(phase.frontier(st), st[FRONTIER_DIR_KEY],
                                     unvisited=unvisited)
-        cand = ctx.propagate_dynamic(st, phase, pull, dtype=jnp.int32)
+        cand, occ = ctx.propagate_sparse(st, phase, pull, dtype=jnp.int32)
         newly = unvisited & (cand < jnp.iinfo(jnp.int32).max)
         depth = jnp.where(newly, cand, st["depth"]).astype(jnp.int32)
-        return {"depth": depth, "active": newly, FRONTIER_DIR_KEY: pull}
+        return {"depth": depth, "active": newly, FRONTIER_DIR_KEY: pull,
+                FRONTIER_OCC_KEY: occ}
 
     def converged(prev, cur):
         return ~jnp.any(cur["active"])

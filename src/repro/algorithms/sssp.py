@@ -12,8 +12,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.vertex_program import (FRONTIER_DIR_KEY, MIN, EdgePhase,
-                                       VertexProgram)
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       MIN, EdgePhase, VertexProgram)
 
 __all__ = ["sssp"]
 
@@ -24,6 +24,7 @@ def sssp(source: int = 0, max_iters: int = 4096) -> VertexProgram:
         vprop=lambda st, src, w: st["dist"][src] + w,
         spred=lambda st, src: st["active"][src],  # frontier only
         frontier=lambda st: st["active"],
+        gatherable=True,  # spred == frontier membership
     )
 
     def init(graph, key=None):
@@ -31,14 +32,16 @@ def sssp(source: int = 0, max_iters: int = 4096) -> VertexProgram:
         dist = jnp.full((v,), jnp.inf, jnp.float32).at[source].set(0.0)
         active = jnp.zeros((v,), bool).at[source].set(True)
         return {"dist": dist, "active": active,
-                FRONTIER_DIR_KEY: jnp.asarray(False)}
+                FRONTIER_DIR_KEY: jnp.asarray(False),
+                FRONTIER_OCC_KEY: jnp.float32(-1.0)}
 
     def step(ctx, st, it):
         pull = ctx.choose_direction(phase.frontier(st), st[FRONTIER_DIR_KEY])
-        cand = ctx.propagate_dynamic(st, phase, pull)
+        cand, occ = ctx.propagate_sparse(st, phase, pull)
         dist = jnp.minimum(st["dist"], cand)
         active = dist < st["dist"]
-        return {"dist": dist, "active": active, FRONTIER_DIR_KEY: pull}
+        return {"dist": dist, "active": active, FRONTIER_DIR_KEY: pull,
+                FRONTIER_OCC_KEY: occ}
 
     def converged(prev, cur):
         return ~jnp.any(cur["active"])

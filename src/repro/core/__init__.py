@@ -2,27 +2,32 @@ from repro.core.config_space import (ALL_CONFIGS, DYNAMIC_CONFIGS,
                                      STATIC_CONFIGS, Coherence, Consistency,
                                      SystemConfig, UpdateProp)
 from repro.core.executor import EdgeContext, RunResult, run
-from repro.core.frontier import (choose_direction, dense_to_sparse,
+from repro.core.frontier import (FrontierEdges, SparseFrontier,
+                                 choose_direction, dense_to_sparse,
                                  frontier_density, frontier_edges,
-                                 frontier_size, sparse_to_dense)
+                                 frontier_size, gather_frontier_edges,
+                                 sparse_to_dense)
 from repro.core.model import specialize, specialize_partial
 from repro.core.properties import (TABLE_III, AlgorithmicProperties, Locus,
                                    Traversal)
 from repro.core.taxonomy import (PAPER_GPU, TPU_V5E, GraphProfile, HwProfile,
                                  classify, profile_graph)
-from repro.core.vertex_program import (FRONTIER_DIR_KEY, MAX, MIN, SUM,
-                                       EdgePhase, Monoid, VertexProgram)
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       MAX, MIN, SUM, EdgePhase, Monoid,
+                                       VertexProgram)
 
 __all__ = [
     "ALL_CONFIGS", "DYNAMIC_CONFIGS", "STATIC_CONFIGS",
     "Coherence", "Consistency", "SystemConfig", "UpdateProp",
     "EdgeContext", "RunResult", "run",
+    "FrontierEdges", "SparseFrontier",
     "choose_direction", "dense_to_sparse", "frontier_density",
-    "frontier_edges", "frontier_size", "sparse_to_dense",
+    "frontier_edges", "frontier_size", "gather_frontier_edges",
+    "sparse_to_dense",
     "specialize", "specialize_partial",
     "TABLE_III", "AlgorithmicProperties", "Locus", "Traversal",
     "PAPER_GPU", "TPU_V5E", "GraphProfile", "HwProfile", "classify",
     "profile_graph",
-    "FRONTIER_DIR_KEY", "MAX", "MIN", "SUM", "EdgePhase", "Monoid",
-    "VertexProgram",
+    "FRONTIER_DIR_KEY", "FRONTIER_OCC_KEY", "MAX", "MIN", "SUM",
+    "EdgePhase", "Monoid", "VertexProgram",
 ]

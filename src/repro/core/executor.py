@@ -17,8 +17,20 @@ boolean to :meth:`EdgeContext.propagate_dynamic` (typically computed by
 Frontier-less programs fall back to the documented
 :data:`EdgeContext.DEFAULT_DYNAMIC_DIRECTION`.
 
+:meth:`EdgeContext.propagate_sparse` is the sparse-frontier upgrade of
+``propagate_dynamic``: when the dynamic heuristic picked push *and* the
+frontier's edge list fits the static gather capacity, the iteration
+gathers exactly the frontier's out-edges from the CSR order
+(:func:`repro.core.frontier.gather_frontier_edges`) and reduces over the
+``[cap_e]`` slice (:func:`repro.kernels.segment_reduce.
+gathered_segment_reduce`) — O(m_f) gathered work instead of the O(E)
+masked scan.  Capacity overflow (detected via the true counts the sparse
+containers carry) falls back to the dense pre-chunked path, never
+dropping edges.
+
 ``run`` drives a program to convergence with a jitted, donated step and
-records the per-iteration direction trace of frontier-aware programs.
+records the per-iteration direction and sparse-occupancy traces of
+frontier-aware programs.
 """
 from __future__ import annotations
 
@@ -35,9 +47,11 @@ from repro.core.coherence import segment_reduce, segment_reduce_owned
 from repro.core.config_space import (Coherence, Consistency, SystemConfig,
                                      UpdateProp)
 from repro.core.consistency import scheduled_reduce
-from repro.core.frontier import choose_direction
-from repro.core.vertex_program import (FRONTIER_DIR_KEY, EdgePhase, Monoid,
-                                       VertexProgram)
+from repro.core.frontier import (ALPHA, choose_direction, dense_to_sparse,
+                                 gather_frontier_edges)
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       EdgePhase, Monoid, VertexProgram)
+from repro.kernels.segment_reduce import gathered_segment_reduce
 from repro.graph.structure import Graph
 
 __all__ = ["EdgeContext", "RunResult", "run"]
@@ -65,13 +79,30 @@ class EdgeContext:
     DEFAULT_DYNAMIC_DIRECTION = UpdateProp.PUSH
 
     def __init__(self, graph: Graph, config: SystemConfig,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 sparse_edge_capacity: Optional[int] = None):
         self.graph = graph
         self.config = config
         self.use_pallas = use_pallas
         self.n_nodes = graph.n_nodes
         self.n_edges = graph.n_edges
         g = graph.device_put()
+        # Sparse-gather capacities (static: jit needs fixed shapes).  The
+        # edge capacity defaults to ceil(E/alpha) — the push->pull
+        # trigger fires once m_f*alpha > E, so a dynamic push frontier
+        # rarely carries more out-edges than that; anything larger falls
+        # back to the dense path via the overflow flags.  The vertex
+        # capacity rides along at the same size: on the symmetric inputs
+        # the paper uses, every reachable frontier vertex has >= 1
+        # out-edge, so n_f <= m_f.  Pass 0 to disable the sparse path.
+        if sparse_edge_capacity is None:
+            sparse_edge_capacity = min(self.n_edges,
+                                       max(16, -(-self.n_edges // int(ALPHA))))
+        self.sparse_edge_capacity = int(sparse_edge_capacity)
+        self._sparse_vertex_capacity = max(
+            1, min(self.n_nodes, self.sparse_edge_capacity))
+        self._row_ptr_out = jnp.asarray(g.row_ptr_out)
+        self._csr_raw = (g.src, g.dst, g.weight)
         n_chunks = 1 if config.consistency is Consistency.DRF0 \
             else config.n_chunks
         v = graph.n_nodes
@@ -174,6 +205,93 @@ class EdgeContext:
             lambda st: self._propagate(st, phase, UpdateProp.PUSH, dtype),
             state)
 
+    def propagate_sparse(self, state, phase: EdgePhase, pull,
+                         dtype=jnp.float32):
+        """``propagate_dynamic`` with an O(m_f) sparse-gather fast path.
+
+        Returns ``(reduced [V], occupancy)``.  ``occupancy`` is a traced
+        float scalar: ``m_f / sparse_edge_capacity`` when this iteration
+        ran the sparse-gathered path, -1.0 when it ran a dense O(E) scan
+        (programs record it under :data:`FRONTIER_OCC_KEY` so ``run``
+        can trace sparse-vs-dense residency per iteration).
+
+        The sparse path fires only when *all* of: the config is dynamic
+        (static cells keep their specialized dense realisations), the
+        phase declares itself ``gatherable`` (see below), the heuristic
+        chose push (pull's full destination scan is inherently dense),
+        and the frontier's vertex *and* edge lists fit their static
+        capacities.  Overflow of either capacity falls back to the
+        dense pre-chunked path — slower, never wrong.  Pull iterations
+        never pay the gather: the push/pull branch is the outer
+        ``lax.cond``, so the gather is traced only inside the push
+        branch.
+
+        Soundness precondition: gathering reduces *only* the frontier's
+        out-edges, so every edge contributing a non-identity message on
+        the dense push path must have a frontier source.  A phase
+        asserts that structurally via ``EdgePhase.gatherable`` — the
+        BFS/SSSP/BC phases set it because their ``spred`` restricts
+        sources to exactly the frontier mask.  A phase whose frontier
+        only steers the direction heuristic (every source contributes)
+        leaves it False and always runs the dense path.
+        """
+        dense_occ = jnp.float32(-1.0)
+        if (self.config.prop is not UpdateProp.PUSH_PULL
+                or phase.frontier is None or not phase.gatherable
+                or self.sparse_edge_capacity == 0):
+            return self.propagate_dynamic(state, phase, pull, dtype), dense_occ
+
+        def dense_pull(st):
+            return self._propagate(st, phase, UpdateProp.PULL, dtype), \
+                dense_occ
+
+        def push(st):
+            front = dense_to_sparse(phase.frontier(st),
+                                    self._sparse_vertex_capacity)
+            edges = gather_frontier_edges(front.ids, self._row_ptr_out,
+                                          self.sparse_edge_capacity)
+            fits = ~front.overflowed & ~edges.overflowed
+            occ = jnp.where(
+                fits,
+                edges.count.astype(jnp.float32) / self.sparse_edge_capacity,
+                dense_occ)
+            out = jax.lax.cond(
+                fits,
+                lambda s: self._propagate_gathered(s, phase, edges.edge_ids,
+                                                   dtype),
+                lambda s: self._propagate(s, phase, UpdateProp.PUSH, dtype),
+                st)
+            return out, occ
+
+        return jax.lax.cond(jnp.asarray(pull, bool), dense_pull, push, state)
+
+    def _propagate_gathered(self, state, phase: EdgePhase,
+                            edge_ids: jnp.ndarray, dtype) -> jnp.ndarray:
+        """Push-direction reduction over a gathered [cap_e] edge subset.
+
+        ``edge_ids`` indexes the CSR (by-src) edge arrays; -1 marks
+        padding.  Padding and predicate-failing edges are routed to the
+        reducer's trash segment, which contributes the monoid identity —
+        the same convention as the dense path's masked scan.  For
+        min/max and exact (integer) sums the result is bit-identical to
+        the dense path; inexact float sums may differ in final ULPs
+        because the gathered order sums edges differently than the
+        chunked schedule.
+        """
+        src, dst, w = self._csr_raw
+        valid = edge_ids >= 0
+        at = jnp.where(valid, edge_ids, 0)
+        sv, tv, wv = src[at], dst[at], w[at]
+        keep = valid
+        if phase.spred is not None:
+            keep &= phase.spred(state, sv)
+        if phase.tpred is not None:
+            keep &= phase.tpred(state, tv)
+        msg = phase.vprop(state, sv, wv).astype(dtype)
+        ids = jnp.where(keep, tv, -1)
+        return gathered_segment_reduce(msg, ids, self.n_nodes,
+                                       phase.monoid.name)
+
     def _propagate(self, state, phase: EdgePhase, direction: UpdateProp,
                    dtype) -> jnp.ndarray:
         cfg = self.config
@@ -239,6 +357,23 @@ class RunResult:
     #: per-iteration edge-direction letters ("S"=push, "T"=pull) for
     #: frontier-aware programs; None for programs without the protocol.
     direction_trace: Optional[str] = None
+    #: per-iteration sparse-gather occupancy (m_f / cap_e; -1.0 for a
+    #: dense iteration) for programs recording FRONTIER_OCC_KEY; None
+    #: for programs without the protocol.
+    occupancy_trace: Optional[List[float]] = None
+
+    @property
+    def sparse_iterations(self) -> Optional[int]:
+        """How many iterations ran the O(m_f) gathered path."""
+        if self.occupancy_trace is None:
+            return None
+        return sum(1 for o in self.occupancy_trace if o >= 0.0)
+
+    @property
+    def mean_sparse_occupancy(self) -> Optional[float]:
+        """Mean m_f/cap_e over the sparse-gathered iterations."""
+        occ = [o for o in (self.occupancy_trace or []) if o >= 0.0]
+        return sum(occ) / len(occ) if occ else None
 
     def extract(self, program: VertexProgram):
         return program.extract(self.state)
@@ -246,9 +381,11 @@ class RunResult:
 
 def run(program: VertexProgram, graph: Graph, config: SystemConfig,
         key: Optional[jax.Array] = None, max_iters: Optional[int] = None,
-        use_pallas: bool = False, warmup: bool = True) -> RunResult:
+        use_pallas: bool = False, warmup: bool = True,
+        sparse_edge_capacity: Optional[int] = None) -> RunResult:
     """Iterate ``program`` on ``graph`` under ``config`` to convergence."""
-    ctx = EdgeContext(graph, config, use_pallas=use_pallas)
+    ctx = EdgeContext(graph, config, use_pallas=use_pallas,
+                      sparse_edge_capacity=sparse_edge_capacity)
     state = program.init(graph, key) if key is not None else program.init(graph)
     state = jax.tree.map(jnp.asarray, state)
 
@@ -268,7 +405,9 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
     # per-iteration choice under FRONTIER_DIR_KEY
     traced = (program.frontier_update is not None
               and isinstance(state, dict) and FRONTIER_DIR_KEY in state)
+    occ_traced = traced and FRONTIER_OCC_KEY in state
     trace: List[str] = []
+    occ_trace: List[float] = []
     t0 = time.perf_counter()
     it, done = 0, False
     while it < limit:
@@ -277,9 +416,12 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
         done = bool(done_dev)
         if traced:
             trace.append("T" if bool(state[FRONTIER_DIR_KEY]) else "S")
+        if occ_traced:
+            occ_trace.append(float(state[FRONTIER_OCC_KEY]))
         if done:
             break
     jax.block_until_ready(state)
     dt = time.perf_counter() - t0
     return RunResult(state=state, iterations=it, seconds=dt, converged=done,
-                     direction_trace="".join(trace) if traced else None)
+                     direction_trace="".join(trace) if traced else None,
+                     occupancy_trace=occ_trace if occ_traced else None)

@@ -8,7 +8,13 @@ fixing it for the whole run.  This module supplies the two ingredients:
    dense ``[V]`` boolean mask (jit-friendly: fixed shape, no host sync).
    :func:`dense_to_sparse` / :func:`sparse_to_dense` convert to/from a
    padded index list of static capacity for kernels that want the sparse
-   (queue-like) view.
+   (queue-like) view, and :func:`gather_frontier_edges` expands the
+   sparse vertex list into the frontier's *edge* list by slicing CSR row
+   offsets — the Gunrock-style "advance" primitive that makes a sparse
+   iteration cost O(m_f) gathered work instead of an O(E) masked scan.
+   Both sparse forms carry the true (pre-truncation) element count so
+   callers can detect capacity overflow and fall back to the dense path
+   instead of silently dropping work.
 
 2. **The direction heuristic.**  :func:`choose_direction` is the
    Beamer-style (direction-optimizing BFS) rule also used by Gunrock's
@@ -37,13 +43,14 @@ absolute sizes.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
 __all__ = ["ALPHA", "BETA", "frontier_size", "frontier_edges",
-           "frontier_density", "choose_direction", "dense_to_sparse",
-           "sparse_to_dense"]
+           "frontier_density", "choose_direction", "SparseFrontier",
+           "FrontierEdges", "dense_to_sparse", "sparse_to_dense",
+           "gather_frontier_edges"]
 
 #: push->pull trigger: pull once frontier out-edges exceed unexplored/ALPHA.
 ALPHA = 14.0
@@ -89,15 +96,53 @@ def choose_direction(mask: jnp.ndarray, out_degree: jnp.ndarray,
     return jnp.where(prev_pull, ~to_push, to_pull)
 
 
-def dense_to_sparse(mask: jnp.ndarray, capacity: int) -> jnp.ndarray:
-    """Dense [V] mask -> padded [capacity] vertex-id list (-1 padding).
+class SparseFrontier(NamedTuple):
+    """Padded sparse frontier plus its true size.
 
-    ``capacity`` is static (jit requires fixed shapes); frontier vertices
-    beyond it are dropped, so size it at V for exactness.
+    ``ids`` is the ``[capacity]`` int32 vertex-id list (ascending, -1
+    padding); ``count`` is the frontier's *true* vertex count, which may
+    exceed ``capacity`` — :attr:`overflowed` is the signal that ``ids``
+    is a truncation and any consumer must fall back to the dense mask.
+    """
+    ids: jnp.ndarray
+    count: jnp.ndarray
+
+    @property
+    def overflowed(self) -> jnp.ndarray:
+        """Traced bool: True iff frontier vertices were dropped."""
+        return self.count > self.ids.shape[0]
+
+
+class FrontierEdges(NamedTuple):
+    """Padded frontier-edge list plus the gathered frontier's edge count.
+
+    ``edge_ids`` indexes the CSR (by-src) edge arrays (``[capacity]``
+    int32, -1 padding); ``count`` is the total out-edge count of the
+    *gathered* vertex list.  If the vertex list itself overflowed,
+    ``count`` undercounts the real m_f — check both overflow flags.
+    """
+    edge_ids: jnp.ndarray
+    count: jnp.ndarray
+
+    @property
+    def overflowed(self) -> jnp.ndarray:
+        """Traced bool: True iff frontier edges were dropped."""
+        return self.count > self.edge_ids.shape[0]
+
+
+def dense_to_sparse(mask: jnp.ndarray, capacity: int) -> SparseFrontier:
+    """Dense [V] mask -> :class:`SparseFrontier` of static ``capacity``.
+
+    ``capacity`` is static (jit requires fixed shapes).  Frontier
+    vertices beyond it do not fit in ``ids``; the returned ``count`` is
+    the true frontier size so callers observe the overflow (via
+    :attr:`SparseFrontier.overflowed`) instead of silently computing on
+    a truncated frontier.  Size ``capacity`` at V for exactness.
     """
     v = mask.shape[0]
     ids = jnp.nonzero(mask, size=capacity, fill_value=v)[0]
-    return jnp.where(ids < v, ids, -1).astype(jnp.int32)
+    ids = jnp.where(ids < v, ids, -1).astype(jnp.int32)
+    return SparseFrontier(ids=ids, count=frontier_size(mask))
 
 
 def sparse_to_dense(ids: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
@@ -105,3 +150,32 @@ def sparse_to_dense(ids: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
     mask = jnp.zeros((n_nodes + 1,), bool)
     safe = jnp.where(ids < 0, n_nodes, ids)
     return mask.at[safe].set(True)[:n_nodes]
+
+
+def gather_frontier_edges(ids: jnp.ndarray, row_ptr: jnp.ndarray,
+                          capacity: int) -> FrontierEdges:
+    """Expand a sparse vertex list into its CSR out-edge list.
+
+    For each non-padding vertex in ``ids``, slice its edge range out of
+    ``row_ptr`` ([V+1] CSR row offsets) and concatenate the ranges into
+    a padded ``[capacity]`` list of edge indices (-1 padding).  Work and
+    memory are O(capacity + |ids|), independent of |E| — this is what
+    makes a sparse push iteration O(m_f).
+
+    The slot->vertex mapping is a searchsorted over the running degree
+    sum: output slot ``j`` belongs to the k-th listed vertex where
+    ``cum[k-1] <= j < cum[k]``, at offset ``j - cum[k-1]`` within its
+    row.  Padding ids (-1) have degree 0 and are never selected.
+    """
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    starts = row_ptr[safe].astype(jnp.int32)
+    degs = jnp.where(valid, row_ptr[safe + 1].astype(jnp.int32) - starts, 0)
+    cum = jnp.cumsum(degs)
+    total = cum[-1]
+    slot = jnp.arange(capacity, dtype=jnp.int32)
+    k = jnp.searchsorted(cum, slot, side="right")
+    k = jnp.minimum(k, ids.shape[0] - 1)
+    edge = starts[k] + (slot - (cum[k] - degs[k]))
+    edge_ids = jnp.where(slot < jnp.minimum(total, capacity), edge, -1)
+    return FrontierEdges(edge_ids=edge_ids.astype(jnp.int32), count=total)

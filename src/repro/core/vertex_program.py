@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core.properties import TABLE_III, AlgorithmicProperties
 
 __all__ = ["Monoid", "SUM", "MIN", "MAX", "EdgePhase", "VertexProgram",
-           "FRONTIER_DIR_KEY"]
+           "FRONTIER_DIR_KEY", "FRONTIER_OCC_KEY"]
 
 State = dict  # str -> jnp.ndarray pytree
 
@@ -26,6 +26,14 @@ State = dict  # str -> jnp.ndarray pytree
 #: their step chose (bool scalar, True=pull).  ``run`` reads it back per
 #: iteration to build :attr:`RunResult.direction_trace`.
 FRONTIER_DIR_KEY = "pull"
+
+#: State key under which frontier-aware programs record this iteration's
+#: sparse-gather occupancy (float scalar): ``m_f / sparse_edge_capacity``
+#: when :meth:`~repro.core.executor.EdgeContext.propagate_sparse` took
+#: the gathered O(m_f) path, -1.0 when the iteration ran the dense O(E)
+#: scan (pull direction, capacity overflow, or a static config).  ``run``
+#: reads it back per iteration into :attr:`RunResult.occupancy_trace`.
+FRONTIER_OCC_KEY = "sparse_occ"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,12 +83,21 @@ class EdgePhase:
     to pick push vs. pull per iteration.  ``None`` marks a frontier-less
     phase, which dynamic configs run in the context's documented default
     direction.
+
+    ``gatherable`` — structural opt-in to the sparse-gathered push path:
+    set it True only if ``spred`` restricts contributing sources to
+    (a subset of) the ``frontier`` mask, so reducing over only the
+    frontier's gathered out-edges is equivalent to the dense masked
+    scan.  A phase whose frontier merely steers the direction heuristic
+    while every source contributes must leave it False, or sparse
+    iterations would silently drop contributions.
     """
     monoid: Monoid
     vprop: Callable[[State, jnp.ndarray, jnp.ndarray], jnp.ndarray]
     spred: Optional[Callable[[State, jnp.ndarray], jnp.ndarray]] = None
     tpred: Optional[Callable[[State, jnp.ndarray], jnp.ndarray]] = None
     frontier: Optional[Callable[[State], jnp.ndarray]] = None
+    gatherable: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,6 +2,9 @@ from repro.kernels.segment_reduce.ops import BlockedSegmentReducer
 from repro.kernels.segment_reduce.ref import (segment_max_ref,
                                               segment_min_ref,
                                               segment_sum_ref)
+from repro.kernels.segment_reduce.sparse import (gathered_segment_reduce,
+                                                 gathered_segment_reduce_ref)
 
 __all__ = ["BlockedSegmentReducer", "segment_sum_ref", "segment_min_ref",
-           "segment_max_ref"]
+           "segment_max_ref", "gathered_segment_reduce",
+           "gathered_segment_reduce_ref"]

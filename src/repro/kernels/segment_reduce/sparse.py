@@ -1,0 +1,70 @@
+"""Gathered-frontier segment reduction: O(cap_e) instead of O(E).
+
+:class:`~repro.kernels.segment_reduce.ops.BlockedSegmentReducer` builds
+its tiling plan on host from *static* segment ids, so it can only serve
+reductions over a fixed edge order (the full CSR/CSC/owned edge set).  A
+frontier-gathered edge subset is a traced array that changes every
+iteration — no host-side plan can exist for it.  The sparse path
+therefore reduces with XLA's native scatter over exactly the gathered
+``[cap_e]`` slice: the work is proportional to the static gather
+capacity (sized ~|E|/alpha by the executor), not to |E|, which is the
+entire point of gathering.
+
+Padding and predicate-masked slots carry segment id -1 and are routed to
+a trash segment, so callers need not substitute the monoid identity into
+the value array first.  Empty segments come back holding the reduction's
+identity (0 / +inf / -inf, or the integer extrema), exactly matching the
+dense executor path's masked-identity convention — the two paths are
+bit-identical for min/max and exact-sum inputs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_reduce.ref import (segment_max_ref,
+                                              segment_min_ref,
+                                              segment_sum_ref)
+
+__all__ = ["gathered_segment_reduce", "gathered_segment_reduce_ref"]
+
+# one monoid-name dispatch for the package: the gathered entry point and
+# the blocked kernels' oracles must agree on op semantics by construction
+_OPS = {"sum": segment_sum_ref, "min": segment_min_ref,
+        "max": segment_max_ref}
+
+
+def gathered_segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                            num_segments: int, kind: str) -> jnp.ndarray:
+    """Reduce a gathered edge subset into ``[num_segments]``.
+
+    ``values``/``segment_ids`` are the ``[cap_e]`` gathered slice;
+    ``segment_ids < 0`` marks padding or masked-out slots whose values
+    are ignored (their value may be arbitrary — no identity substitution
+    required).  ``kind`` is the monoid name ('sum' | 'min' | 'max').
+    """
+    ids = jnp.where(segment_ids < 0, num_segments, segment_ids)
+    out = _OPS[kind](values, ids, num_segments + 1)
+    return out[:num_segments]
+
+
+def gathered_segment_reduce_ref(values, segment_ids, num_segments: int,
+                                kind: str) -> np.ndarray:
+    """Numpy oracle for :func:`gathered_segment_reduce` (tests only)."""
+    values = np.asarray(values)
+    segment_ids = np.asarray(segment_ids)
+    if kind == "sum":
+        ident, combine = np.zeros((), values.dtype), np.add
+    elif kind == "min":
+        ident = (np.iinfo(values.dtype).max
+                 if np.issubdtype(values.dtype, np.integer) else np.inf)
+        combine = np.minimum
+    else:
+        ident = (np.iinfo(values.dtype).min
+                 if np.issubdtype(values.dtype, np.integer) else -np.inf)
+        combine = np.maximum
+    out = np.full((num_segments,), ident, values.dtype)
+    for v, s in zip(values, segment_ids):
+        if 0 <= s < num_segments:
+            out[s] = combine(out[s], v)
+    return out

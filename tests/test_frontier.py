@@ -91,10 +91,19 @@ class TestHeuristic:
 
     def test_sparse_dense_roundtrip(self):
         mask = jnp.asarray([False, True, False, True, True])
-        ids = dense_to_sparse(mask, capacity=5)
-        assert set(np.asarray(ids).tolist()) == {1, 3, 4, -1}
-        back = sparse_to_dense(ids, 5)
+        front = dense_to_sparse(mask, capacity=5)
+        assert set(np.asarray(front.ids).tolist()) == {1, 3, 4, -1}
+        assert int(front.count) == 3 and not bool(front.overflowed)
+        back = sparse_to_dense(front.ids, 5)
         np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+
+    def test_dense_to_sparse_overflow_is_explicit(self):
+        """Vertices past capacity can't fit in ids, but the true count
+        survives so callers can fall back to the dense mask."""
+        mask = jnp.asarray([True, False, True, True, True])
+        front = dense_to_sparse(mask, capacity=2)
+        assert np.asarray(front.ids).tolist() == [0, 2]  # first two set bits
+        assert int(front.count) == 4 and bool(front.overflowed)
 
 
 class TestConfigMatrix:

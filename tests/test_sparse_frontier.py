@@ -1,0 +1,252 @@
+"""Sparse-frontier edge gathering: the O(m_f) push path.
+
+Covers the acceptance criteria of the sparse-frontier PR: round-trip and
+overflow properties of the sparse containers, the CSR frontier-edge
+gather (empty/full/capacity-1/padding), the gathered segment-reduce
+entry point against its numpy oracle, and — at system level — that a
+small-frontier BFS iteration provably reduces over only the gathered
+[cap_e] slice (reducer call shape + occupancy trace), produces
+bit-identical results to the dense path across every config cell, and
+falls back to dense on capacity overflow instead of dropping edges.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.algorithms import bfs, sssp
+from repro.algorithms.reference import bfs_np, sssp_np
+from repro.core import ALL_CONFIGS, EdgeContext, SystemConfig, run
+from repro.core.frontier import (dense_to_sparse, gather_frontier_edges,
+                                 sparse_to_dense)
+from repro.kernels.segment_reduce import (gathered_segment_reduce,
+                                          gathered_segment_reduce_ref)
+from repro.graph import powerlaw_graph, random_graph
+
+CONFIG_NAMES = [c.name for c in ALL_CONFIGS]
+
+
+@pytest.fixture(scope="module")
+def rand_g():
+    return random_graph(64, 400, seed=0, weighted=True, block_size=32)
+
+
+@pytest.fixture(scope="module")
+def sf_g():
+    return powerlaw_graph(200, 1500, alpha=1.2, seed=1, weighted=True,
+                          block_size=32)
+
+
+def _gather_ref(ids, row_ptr):
+    """Numpy oracle: concatenated CSR edge ranges of the listed vertices."""
+    return np.concatenate(
+        [np.arange(row_ptr[v], row_ptr[v + 1]) for v in ids if v >= 0]
+        or [np.empty(0, np.int64)])
+
+
+class TestSparseContainers:
+    @given(st.integers(1, 96), st.integers(0, 2**31 - 1), st.integers(1, 96))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip_property(self, v, seed, capacity):
+        """capacity >= count: exact mask round-trip, no overflow;
+        capacity < count: ids hold the first `capacity` set bits and the
+        true count survives the truncation."""
+        rng = np.random.default_rng(seed)
+        mask = jnp.asarray(rng.random(v) < rng.random())
+        front = dense_to_sparse(mask, capacity)
+        n_set = int(np.asarray(mask).sum())
+        assert int(front.count) == n_set
+        assert bool(front.overflowed) == (n_set > capacity)
+        ids = np.asarray(front.ids)
+        expect = np.flatnonzero(np.asarray(mask))[:capacity]
+        np.testing.assert_array_equal(ids[ids >= 0], expect)
+        if n_set <= capacity:
+            back = sparse_to_dense(front.ids, v)
+            np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+
+    def test_capacity_one(self):
+        front = dense_to_sparse(jnp.asarray([True, True, True]), 1)
+        assert np.asarray(front.ids).tolist() == [0]
+        assert int(front.count) == 3 and bool(front.overflowed)
+
+    def test_sparse_to_dense_ignores_padding(self):
+        ids = jnp.asarray([-1, 2, -1, 0, -1], jnp.int32)
+        mask = sparse_to_dense(ids, 4)
+        np.testing.assert_array_equal(np.asarray(mask),
+                                      [True, False, True, False])
+
+
+class TestGatherFrontierEdges:
+    def test_empty_frontier(self, rand_g):
+        front = dense_to_sparse(jnp.zeros((rand_g.n_nodes,), bool), 8)
+        fe = gather_frontier_edges(front.ids,
+                                   jnp.asarray(rand_g.row_ptr_out), 16)
+        assert int(fe.count) == 0 and not bool(fe.overflowed)
+        assert np.all(np.asarray(fe.edge_ids) == -1)
+
+    def test_full_frontier_is_identity(self, rand_g):
+        """Every vertex in the frontier at capacity E gathers exactly
+        the CSR edge order, arange(E)."""
+        front = dense_to_sparse(jnp.ones((rand_g.n_nodes,), bool),
+                                rand_g.n_nodes)
+        fe = gather_frontier_edges(front.ids,
+                                   jnp.asarray(rand_g.row_ptr_out),
+                                   rand_g.n_edges)
+        assert int(fe.count) == rand_g.n_edges and not bool(fe.overflowed)
+        np.testing.assert_array_equal(np.asarray(fe.edge_ids),
+                                      np.arange(rand_g.n_edges))
+
+    def test_capacity_one_overflows_not_drops_silently(self, rand_g):
+        rp = np.asarray(rand_g.row_ptr_out)
+        v = int(np.argmax(np.diff(rp)))  # a vertex with max out-degree
+        ids = jnp.asarray([v], jnp.int32)
+        fe = gather_frontier_edges(ids, jnp.asarray(rand_g.row_ptr_out), 1)
+        assert int(fe.count) == rp[v + 1] - rp[v]
+        assert bool(fe.overflowed) == (int(fe.count) > 1)
+        assert int(np.asarray(fe.edge_ids)[0]) == rp[v]
+
+    def test_padding_ids_anywhere_are_skipped(self, rand_g):
+        ids = jnp.asarray([-1, 3, -1, 7, -1, -1], jnp.int32)
+        fe = gather_frontier_edges(ids, jnp.asarray(rand_g.row_ptr_out),
+                                   rand_g.n_edges)
+        ref = _gather_ref([3, 7], np.asarray(rand_g.row_ptr_out))
+        assert int(fe.count) == ref.size
+        got = np.asarray(fe.edge_ids)
+        np.testing.assert_array_equal(got[got >= 0], ref)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+    @settings(max_examples=15, deadline=None)
+    def test_gather_matches_numpy_reference(self, seed, capacity):
+        rng = np.random.default_rng(seed)
+        g = random_graph(48, 300, seed=seed % 7, weighted=False,
+                         block_size=16)
+        mask = rng.random(g.n_nodes) < 0.15
+        front = dense_to_sparse(jnp.asarray(mask), g.n_nodes)
+        fe = gather_frontier_edges(front.ids,
+                                   jnp.asarray(g.row_ptr_out), capacity)
+        ref = _gather_ref(np.flatnonzero(mask), np.asarray(g.row_ptr_out))
+        assert int(fe.count) == ref.size
+        assert bool(fe.overflowed) == (ref.size > capacity)
+        got = np.asarray(fe.edge_ids)
+        np.testing.assert_array_equal(got[got >= 0], ref[:capacity])
+        assert np.all(got[min(ref.size, capacity):] == -1)
+
+
+class TestGatheredSegmentReduce:
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(["sum", "min", "max"]))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_reference(self, seed, kind):
+        rng = np.random.default_rng(seed)
+        n, segs = 64, 9
+        ids = rng.integers(-1, segs, n).astype(np.int32)
+        vals = rng.normal(size=n).astype(np.float32)
+        got = gathered_segment_reduce(jnp.asarray(vals), jnp.asarray(ids),
+                                      segs, kind)
+        ref = gathered_segment_reduce_ref(vals, ids, segs, kind)
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-6)
+
+    def test_int_min_identity_matches_dense_convention(self):
+        """Empty segments hold iinfo.max — the same value the dense
+        masked path substitutes, so sparse/dense stay bit-identical."""
+        out = gathered_segment_reduce(
+            jnp.asarray([5], jnp.int32), jnp.asarray([-1], jnp.int32),
+            3, "min")
+        assert np.asarray(out).tolist() == [np.iinfo(np.int32).max] * 3
+
+
+class TestSparsePathSystem:
+    def test_reduces_only_gathered_edges(self, sf_g, monkeypatch):
+        """The sparse branch's reducer sees [cap_e] values, never [E]:
+        a sparse iteration costs O(cap_e) gathered work by construction."""
+        import repro.core.executor as ex
+        shapes = []
+        orig = ex.gathered_segment_reduce
+
+        def spy(values, segment_ids, num_segments, kind):
+            shapes.append(values.shape)
+            return orig(values, segment_ids, num_segments, kind)
+
+        monkeypatch.setattr(ex, "gathered_segment_reduce", spy)
+        r = run(bfs(), sf_g, SystemConfig.from_name("DG1"))
+        np.testing.assert_array_equal(np.asarray(r.state["depth"]),
+                                      bfs_np(sf_g))
+        cap = EdgeContext(sf_g, SystemConfig.from_name("DG1")) \
+            .sparse_edge_capacity
+        assert shapes and all(s == (cap,) for s in shapes)
+        assert cap < sf_g.n_edges  # strictly less work than a dense scan
+
+    def test_occupancy_trace_marks_sparse_push_iterations(self, sf_g):
+        r = run(bfs(), sf_g, SystemConfig.from_name("DD1"))
+        assert r.occupancy_trace is not None
+        assert len(r.occupancy_trace) == r.iterations
+        cap = EdgeContext(sf_g, SystemConfig.from_name("DD1")) \
+            .sparse_edge_capacity
+        # iteration 0 pushes the source's own out-edges
+        deg0 = int(np.asarray(sf_g.out_degree)[0])
+        assert r.occupancy_trace[0] == pytest.approx(deg0 / cap)
+        assert r.sparse_iterations >= 1
+        # pull iterations are inherently dense
+        for letter, occ in zip(r.direction_trace, r.occupancy_trace):
+            if letter == "T":
+                assert occ == -1.0
+            else:
+                assert occ == -1.0 or 0.0 <= occ <= 1.0
+
+    @pytest.mark.parametrize("cfg", CONFIG_NAMES)
+    def test_bit_identical_to_dense_path_all_configs(self, rand_g, cfg):
+        """sparse_edge_capacity=0 disables the gather entirely; BFS
+        depths (int MIN monoid — exact arithmetic) must agree
+        bit-for-bit with the sparse-enabled run in every cell of the
+        design space.  Float-SUM phases (BC backward) are only
+        ULP-close, not bit-identical, because the gathered order sums
+        edges differently than the chunked schedule."""
+        sparse = run(bfs(), rand_g, SystemConfig.from_name(cfg))
+        dense = run(bfs(), rand_g, SystemConfig.from_name(cfg),
+                    sparse_edge_capacity=0)
+        assert dense.occupancy_trace is None or \
+            all(o == -1.0 for o in dense.occupancy_trace)
+        np.testing.assert_array_equal(np.asarray(sparse.state["depth"]),
+                                      np.asarray(dense.state["depth"]))
+        np.testing.assert_array_equal(np.asarray(sparse.state["depth"]),
+                                      bfs_np(rand_g))
+
+    def test_capacity_overflow_falls_back_to_dense(self, sf_g):
+        """A 1-edge capacity can't hold any real frontier: every
+        iteration must fall back to the dense path and still converge to
+        the oracle (nothing silently dropped)."""
+        r = run(bfs(), sf_g, SystemConfig.from_name("DD1"),
+                sparse_edge_capacity=1)
+        np.testing.assert_array_equal(np.asarray(r.state["depth"]),
+                                      bfs_np(sf_g))
+        assert all(o == -1.0 or o <= 1.0 for o in r.occupancy_trace)
+
+    def test_sssp_sparse_matches_oracle(self, sf_g):
+        r = run(sssp(), sf_g, SystemConfig.from_name("DGR"))
+        assert r.sparse_iterations >= 1
+        got = np.asarray(r.state["dist"])
+        ref = sssp_np(sf_g)
+        mask = np.isfinite(ref)
+        np.testing.assert_allclose(got[mask], ref[mask], atol=1e-4)
+        assert np.array_equal(np.isfinite(got), mask)
+
+    def test_static_configs_never_gather(self, sf_g):
+        for cfg in ("SG1", "TG0"):
+            r = run(bfs(), sf_g, SystemConfig.from_name(cfg))
+            assert all(o == -1.0 for o in r.occupancy_trace)
+
+    def test_non_gatherable_phase_stays_dense(self, rand_g):
+        """A frontier mask that only steers the direction heuristic
+        (gatherable left False: every source contributes) must never
+        take the gathered path — it would drop non-frontier sources."""
+        from repro.core import MIN, EdgePhase
+        ctx = EdgeContext(rand_g, SystemConfig.from_name("DG1"))
+        state = {"x": jnp.arange(rand_g.n_nodes, dtype=jnp.int32),
+                 "f": jnp.zeros((rand_g.n_nodes,), bool).at[0].set(True)}
+        phase = EdgePhase(monoid=MIN, vprop=lambda st, s, w: st["x"][s],
+                          frontier=lambda st: st["f"])
+        out, occ = ctx.propagate_sparse(state, phase, jnp.asarray(False),
+                                        dtype=jnp.int32)
+        assert float(occ) == -1.0
+        ref = ctx.propagate_dynamic(state, phase, jnp.asarray(False),
+                                    dtype=jnp.int32)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
