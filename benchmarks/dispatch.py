@@ -1,0 +1,100 @@
+"""Engine dispatch benchmark: host vs fused us/iteration, tracked as
+``results/BENCH_dispatch.json`` from this PR on.
+
+The pinned workload is a Graph500-parameter R-MAT graph (fixed scale,
+edge factor and seed) so the number is comparable across commits; every
+cell of the full addressable design space (the paper's 12 static cells
+plus the six dynamic ``D**`` cells — ``ALL_CONFIGS``) runs BFS under
+both execution engines and reports seconds, iterations and
+us/iteration (best of ``repeats``).  The host engine pays one jit dispatch plus a blocking
+convergence read per iteration; the fused engine pays one dispatch per
+*run* — the per-iteration delta is exactly the dispatch overhead the
+device-resident ``lax.while_loop`` runner removes, which is what this
+file makes machine-readable for CI to archive.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))          # `benchmarks` package
+sys.path.insert(0, str(_ROOT / "src"))  # `repro` package
+
+from repro.algorithms import REGISTRY
+from repro.core import ALL_CONFIGS, SystemConfig, run
+from repro.graph import rmat_graph
+
+__all__ = ["run_dispatch", "PINNED_WORKLOAD"]
+
+#: The pinned workload — change it and the trajectory restarts.
+PINNED_WORKLOAD = dict(scale=10, edge_factor=8, seed=7)
+APP = "BFS"
+ENGINES = ("host", "fused")
+#: best-of-N per (config, engine): warm repeats are milliseconds (the
+#: exec_fn cache skips recompilation), so generous repeats are cheap
+#: insurance against scheduler noise in the tracked artifact.
+REPEATS = 10
+
+
+def run_dispatch(out_path: str = "results/BENCH_dispatch.json",
+                 scale: int | None = None, repeats: int = REPEATS) -> dict:
+    wl = dict(PINNED_WORKLOAD)
+    if scale is not None:
+        wl["scale"] = scale
+    program = REGISTRY[APP]()
+    g = rmat_graph(weighted=program.weighted, **wl)
+
+    configs = {}
+    for cfg in ALL_CONFIGS:
+        cell = {}
+        for engine in ENGINES:
+            best = None
+            for _ in range(repeats):
+                r = run(program, g, SystemConfig.from_name(cfg.name),
+                        engine=engine)
+                if best is None or r.seconds < best.seconds:
+                    best = r
+            cell[engine] = {
+                "seconds": best.seconds,
+                "iterations": best.iterations,
+                # from the same run as seconds/iterations (RunResult
+                # carries its own dispatch count)
+                "dispatches": best.dispatches,
+                "us_per_iteration": best.seconds * 1e6
+                / max(best.iterations, 1),
+            }
+        cell["fused_speedup"] = (cell["host"]["us_per_iteration"]
+                                 / max(cell["fused"]["us_per_iteration"],
+                                       1e-12))
+        configs[cfg.name] = cell
+
+    speedups = [c["fused_speedup"] for c in configs.values()]
+    result = {
+        "workload": {"generator": "rmat", **wl, "app": APP,
+                     "n_nodes": g.n_nodes, "n_edges": g.n_edges},
+        "repeats": repeats,
+        "configs": configs,
+        "summary": {
+            "n_configs": len(configs),
+            "fused_beats_host": sum(s > 1.0 for s in speedups),
+            "geomean_fused_speedup": math.exp(
+                sum(math.log(s) for s in speedups) / len(speedups)),
+        },
+    }
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2))
+    s = result["summary"]
+    print(f"dispatch_bench,{len(configs)},"
+          f"fused_beats_host={s['fused_beats_host']}/{s['n_configs']};"
+          f"geomean_fused_speedup={s['geomean_fused_speedup']:.2f}x",
+          flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    scale = int(sys.argv[1]) if len(sys.argv) > 1 else None
+    run_dispatch(scale=scale)

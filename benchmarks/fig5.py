@@ -47,7 +47,17 @@ def _configs_for(app: str):
     return STATIC_SHOWN
 
 
-def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None):
+def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None,
+             engine="fused"):
+    """Sweep apps x inputs x configs under one execution engine.
+
+    ``engine="fused"`` (default) times pure device work — one
+    ``lax.while_loop`` dispatch per run, so per-cell differences are
+    kernel differences, not host round-trips.  Repeats and the 12-cell
+    sweep itself amortize construction through the executor's plan
+    cache: each graph's chunked edge orders and reducer tiling plans are
+    built at most once per (order, n_chunks), not per cell.
+    """
     apps = apps or list(REGISTRY)
     graphs = graphs or list(PAPER_GRAPHS)
     results = {}
@@ -62,7 +72,8 @@ def run_fig5(out_dir="results", scale=SCALE, apps=None, graphs=None):
                 best = float("inf")
                 res = None
                 for rep in range(REPEATS):
-                    r = run(program, g, cfg, key=jax.random.key(0))
+                    r = run(program, g, cfg, key=jax.random.key(0),
+                            engine=engine)
                     best = min(best, r.seconds)
                     res = r
                 row[cname] = {"seconds": best,

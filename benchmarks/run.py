@@ -25,9 +25,25 @@ def main() -> None:
                     help="full 6x6 Fig.5 grid (slow); default is a "
                          "representative subset")
     ap.add_argument("--scale", type=int, default=32)
+    ap.add_argument("--json", action="store_true",
+                    help="additionally run the host-vs-fused engine "
+                         "benchmark and write machine-readable "
+                         "results/BENCH_dispatch.json (per-engine "
+                         "us/iteration for the pinned RMAT workload "
+                         "across the design-space configs)")
+    ap.add_argument("--dispatch-only", action="store_true",
+                    help="with --json: skip the paper-artifact sections "
+                         "and only write BENCH_dispatch.json (CI uses "
+                         "this to track the perf trajectory cheaply)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+
+    if args.json or args.dispatch_only:  # --dispatch-only implies --json
+        from benchmarks.dispatch import run_dispatch
+        run_dispatch()
+        if args.dispatch_only:
+            return
 
     t0 = time.perf_counter()
     rows = run_table2()

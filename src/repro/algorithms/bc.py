@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
-                                       SUM, EdgePhase, VertexProgram)
+                                       SUM, EdgePhase, VertexProgram,
+                                       dense_occupancy)
 
 __all__ = ["bc"]
 
@@ -51,7 +52,7 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
             "cur_level": jnp.int32(0),
             "phase": jnp.int32(0),  # 0 = forward, 1 = backward
             FRONTIER_DIR_KEY: jnp.asarray(False),
-            FRONTIER_OCC_KEY: jnp.float32(-1.0),
+            FRONTIER_OCC_KEY: dense_occupancy(),
         }
 
     def step(ctx, st, it):

@@ -24,7 +24,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
-                                       MIN, EdgePhase, VertexProgram)
+                                       MIN, EdgePhase, VertexProgram,
+                                       dense_occupancy)
 
 __all__ = ["bfs"]
 
@@ -47,7 +48,7 @@ def bfs(source: int = 0, max_iters: int = 4096) -> VertexProgram:
         active = jnp.zeros((v,), bool).at[source].set(True)
         return {"depth": depth, "active": active,
                 FRONTIER_DIR_KEY: jnp.asarray(False),
-                FRONTIER_OCC_KEY: jnp.float32(-1.0)}
+                FRONTIER_OCC_KEY: dense_occupancy()}
 
     def step(ctx, st, it):
         unvisited = st["depth"] == _UNSEEN

@@ -1,7 +1,9 @@
 from repro.core.config_space import (ALL_CONFIGS, DYNAMIC_CONFIGS,
                                      STATIC_CONFIGS, Coherence, Consistency,
                                      SystemConfig, UpdateProp)
-from repro.core.executor import EdgeContext, RunResult, run
+from repro.core.executor import (STATS, EdgeContext, ExecutorStats,
+                                 RunResult, run)
+from repro.core.plan_cache import PLAN_CACHE, PlanCache
 from repro.core.frontier import (FrontierEdges, SparseFrontier,
                                  choose_direction, dense_to_sparse,
                                  frontier_density, frontier_edges,
@@ -12,14 +14,16 @@ from repro.core.properties import (TABLE_III, AlgorithmicProperties, Locus,
                                    Traversal)
 from repro.core.taxonomy import (PAPER_GPU, TPU_V5E, GraphProfile, HwProfile,
                                  classify, profile_graph)
-from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
-                                       MAX, MIN, SUM, EdgePhase, Monoid,
-                                       VertexProgram)
+from repro.core.vertex_program import (DENSE_OCC, FRONTIER_DIR_KEY,
+                                       FRONTIER_OCC_KEY, MAX, MIN, SUM,
+                                       EdgePhase, Monoid, VertexProgram,
+                                       dense_occupancy)
 
 __all__ = [
     "ALL_CONFIGS", "DYNAMIC_CONFIGS", "STATIC_CONFIGS",
     "Coherence", "Consistency", "SystemConfig", "UpdateProp",
-    "EdgeContext", "RunResult", "run",
+    "EdgeContext", "RunResult", "run", "ExecutorStats", "STATS",
+    "PLAN_CACHE", "PlanCache",
     "FrontierEdges", "SparseFrontier",
     "choose_direction", "dense_to_sparse", "frontier_density",
     "frontier_edges", "frontier_size", "gather_frontier_edges",
@@ -28,6 +32,6 @@ __all__ = [
     "TABLE_III", "AlgorithmicProperties", "Locus", "Traversal",
     "PAPER_GPU", "TPU_V5E", "GraphProfile", "HwProfile", "classify",
     "profile_graph",
-    "FRONTIER_DIR_KEY", "FRONTIER_OCC_KEY", "MAX", "MIN", "SUM",
-    "EdgePhase", "Monoid", "VertexProgram",
+    "DENSE_OCC", "FRONTIER_DIR_KEY", "FRONTIER_OCC_KEY", "MAX", "MIN",
+    "SUM", "EdgePhase", "Monoid", "VertexProgram", "dense_occupancy",
 ]

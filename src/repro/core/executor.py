@@ -28,14 +28,38 @@ masked scan.  Capacity overflow (detected via the true counts the sparse
 containers carry) falls back to the dense pre-chunked path, never
 dropping edges.
 
-``run`` drives a program to convergence with a jitted, donated step and
-records the per-iteration direction and sparse-occupancy traces of
-frontier-aware programs.
+``run`` drives a program to convergence and records the per-iteration
+direction and sparse-occupancy traces of frontier-aware programs.  Two
+execution engines share the same program contract:
+
+- ``engine="fused"`` (default): the whole convergence loop runs inside
+  **one** jitted ``jax.lax.while_loop`` dispatch.  The carry holds the
+  state, the iteration counter, the done flag and fixed-size
+  ``[max_iters]`` device trace buffers that the loop body writes with
+  ``lax.dynamic_update_index_in_dim``; the host syncs exactly once, at
+  the end, and decodes the buffers into ``RunResult.direction_trace`` /
+  ``occupancy_trace``.  ``RunResult.seconds`` therefore measures kernel
+  work only — no per-iteration jit dispatch, no blocking convergence
+  read.
+- ``engine="host"``: the debugging oracle — one jitted, donated step
+  per iteration with a blocking convergence read in between, the shape
+  GPU frameworks call "kernel-per-iteration".  Trace scalars are
+  carried off as async device copies and decoded after the timer
+  stops, so host-vs-fused timing deltas are dominated by the
+  per-iteration dispatch + sync cost the fused engine exists to
+  remove (plus, for traced programs, two tiny async scalar-copy
+  enqueues per iteration).
+
+Construction cost is amortized by :data:`repro.core.plan_cache.
+PLAN_CACHE`: the device graph, pre-chunked edge orders and blocked-
+reducer tiling plans are cached per graph and shared across configs,
+and whole bound contexts are reused via :meth:`EdgeContext.create`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from functools import partial
 from typing import Any, Callable, List, Optional
 
@@ -49,12 +73,37 @@ from repro.core.config_space import (Coherence, Consistency, SystemConfig,
 from repro.core.consistency import scheduled_reduce
 from repro.core.frontier import (ALPHA, choose_direction, dense_to_sparse,
                                  gather_frontier_edges)
+from repro.core.plan_cache import PLAN_CACHE
 from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
-                                       EdgePhase, Monoid, VertexProgram)
+                                       EdgePhase, Monoid, VertexProgram,
+                                       dense_occupancy)
 from repro.kernels.segment_reduce import gathered_segment_reduce
 from repro.graph.structure import Graph
 
-__all__ = ["EdgeContext", "RunResult", "run"]
+__all__ = ["EdgeContext", "RunResult", "run", "ExecutorStats", "STATS"]
+
+
+@dataclasses.dataclass
+class ExecutorStats:
+    """Process-wide device-dispatch counter (tests and benchmarks).
+
+    ``dispatches`` counts *timed* jitted invocations issued by ``run``:
+    the host engine increments once per iteration step, the fused
+    engine exactly once per run.  Warmup compilation is not counted —
+    it happens outside the timed region on both engines.
+    """
+    dispatches: int = 0
+
+    def reset(self) -> None:
+        self.dispatches = 0
+
+
+STATS = ExecutorStats()
+
+#: Max compiled runner executables retained per graph (LRU): generous
+#: for design-space sweeps (18 cells x 2 engines fits), bounded for
+#: program-per-root loops.
+_EXEC_FN_CAPACITY = 64
 
 
 def _pad_reshape(arr, n_chunks, fill):
@@ -78,39 +127,86 @@ class EdgeContext:
     #: programs should instead call :meth:`propagate_dynamic`.
     DEFAULT_DYNAMIC_DIRECTION = UpdateProp.PUSH
 
+    @staticmethod
+    def default_sparse_capacity(graph: Graph) -> int:
+        """Default sparse-gather edge capacity: ``ceil(E/alpha)``.
+
+        The push->pull trigger fires once ``m_f*alpha > E``, so a
+        dynamic push frontier rarely carries more out-edges than that;
+        anything larger falls back to the dense path via the overflow
+        flags.
+        """
+        return min(graph.n_edges,
+                   max(16, -(-graph.n_edges // int(ALPHA))))
+
+    @classmethod
+    def create(cls, graph: Graph, config: SystemConfig,
+               use_pallas: bool = False,
+               sparse_edge_capacity: Optional[int] = None) -> "EdgeContext":
+        """Cached constructor: reuse the bound context for a repeated
+        (graph, config, use_pallas, capacity) cell.
+
+        Contexts are immutable after construction, so sharing one across
+        ``run`` calls is safe; the underlying artifacts are additionally
+        shared *across* configs through :data:`PLAN_CACHE` regardless of
+        which constructor built them.
+        """
+        if sparse_edge_capacity is None:
+            sparse_edge_capacity = cls.default_sparse_capacity(graph)
+        cap = int(sparse_edge_capacity)
+
+        def build():
+            ctx = cls(graph, config, use_pallas=use_pallas,
+                      sparse_edge_capacity=cap)
+            # a cache-owned context must not pin its graph, or the
+            # cache's eviction-on-collection could never fire (cache ->
+            # context -> graph would keep the graph alive forever)
+            ctx._graph_strong = None
+            return ctx
+
+        return PLAN_CACHE.get(
+            graph, "context", (config, bool(use_pallas), cap), build)
+
     def __init__(self, graph: Graph, config: SystemConfig,
                  use_pallas: bool = False,
                  sparse_edge_capacity: Optional[int] = None):
-        self.graph = graph
+        # directly constructed contexts keep their graph alive like any
+        # object would; :meth:`create` clears the strong reference on
+        # cache-owned contexts so eviction can fire (see build() there)
+        self._graph_strong: Optional[Graph] = graph
+        self._graph_ref = weakref.ref(graph)
         self.config = config
         self.use_pallas = use_pallas
         self.n_nodes = graph.n_nodes
         self.n_edges = graph.n_edges
-        g = graph.device_put()
-        # Sparse-gather capacities (static: jit needs fixed shapes).  The
-        # edge capacity defaults to ceil(E/alpha) — the push->pull
-        # trigger fires once m_f*alpha > E, so a dynamic push frontier
-        # rarely carries more out-edges than that; anything larger falls
-        # back to the dense path via the overflow flags.  The vertex
-        # capacity rides along at the same size: on the symmetric inputs
-        # the paper uses, every reachable frontier vertex has >= 1
-        # out-edge, so n_f <= m_f.  Pass 0 to disable the sparse path.
+        cache = PLAN_CACHE
+        g = cache.get(graph, "device", (), graph.device_put)
+        # Sparse-gather capacities (static: jit needs fixed shapes).
+        # See :meth:`default_sparse_capacity` for the edge-capacity
+        # rationale.  The vertex capacity rides along at the same size:
+        # on the symmetric inputs the paper uses, every reachable
+        # frontier vertex has >= 1 out-edge, so n_f <= m_f.  Pass 0 to
+        # disable the sparse path.
         if sparse_edge_capacity is None:
-            sparse_edge_capacity = min(self.n_edges,
-                                       max(16, -(-self.n_edges // int(ALPHA))))
+            sparse_edge_capacity = self.default_sparse_capacity(graph)
         self.sparse_edge_capacity = int(sparse_edge_capacity)
         self._sparse_vertex_capacity = max(
             1, min(self.n_nodes, self.sparse_edge_capacity))
-        self._row_ptr_out = jnp.asarray(g.row_ptr_out)
+        self._row_ptr_out = g.row_ptr_out
         self._csr_raw = (g.src, g.dst, g.weight)
         n_chunks = 1 if config.consistency is Consistency.DRF0 \
             else config.n_chunks
         v = graph.n_nodes
-        self._out_degree = jnp.asarray(g.out_degree)
+        self._out_degree = g.out_degree
+
         # Pre-chunked edge arrays per direction.  Padding edges carry the
         # sentinel id V on both endpoints; they reduce into the extra
-        # segment V and contribute the identity regardless.
-        def chunked(src, dst, w):
+        # segment V and contribute the identity regardless.  Chunked
+        # orders depend only on (edge order, n_chunks), never on the
+        # full config, so the cache shares them across cells — a 12-cell
+        # sweep builds each (order, n_chunks) pair once.
+        def chunked(edges):
+            src, dst, w = edges
             return (_pad_reshape(src, n_chunks, v),
                     _pad_reshape(dst, n_chunks, v),
                     _pad_reshape(w, n_chunks, 0.0))
@@ -118,37 +214,65 @@ class EdgeContext:
         self._reducer = None
         self._pull_reducer = None
         if config.coherence is Coherence.DENOVO:
-            so, do, wo = g.edges_owned()
-            self._push_edges = chunked(so, do, wo)
+            owned = cache.get(graph, "edges_owned", (), g.edges_owned)
+            self._push_edges = cache.get(graph, "chunked",
+                                         ("owned", n_chunks),
+                                         lambda: chunked(owned))
             if use_pallas and config.prop is not UpdateProp.PULL:
-                from repro.kernels.segment_reduce import \
-                    BlockedSegmentReducer
-                self._owned_raw = (so, do, wo)
-                self._reducer = BlockedSegmentReducer(
-                    np.asarray(do), np.asarray(graph.block_ptr),
-                    num_segments=v, block_size=graph.block_size)
+                self._owned_raw = owned
+                self._reducer = cache.get(
+                    graph, "owned_reducer", (),
+                    lambda: self._build_owned_reducer(graph, owned))
         else:
-            self._push_edges = chunked(g.src, g.dst, g.weight)
-        self._pull_edges = chunked(g.src_in, g.dst_in, g.weight_in)
+            self._push_edges = cache.get(
+                graph, "chunked", ("csr", n_chunks),
+                lambda: chunked((g.src, g.dst, g.weight)))
+        self._pull_edges = cache.get(
+            graph, "chunked", ("csc", n_chunks),
+            lambda: chunked((g.src_in, g.dst_in, g.weight_in)))
         # each reducer's host-side tiling plan walks the full edge set, so
         # only build the directions this config can actually execute
         if use_pallas and config.prop is not UpdateProp.PUSH:
-            # Pull-side Pallas fast path: the by-dst (CSC) edge order is
-            # already dst-block-binned (sorted dst => contiguous blocks),
-            # so the blocked reducer applies to *both* coherences — pull
-            # has no atomics for ownership to specialize away.
-            from repro.kernels.segment_reduce import BlockedSegmentReducer
-            din = np.asarray(graph.dst_in, np.int64)
-            # per-block edge offsets are just row_ptr_in sampled at block
-            # boundaries — no need to re-bin the edge set
-            bounds = np.minimum(
-                np.arange(graph.n_blocks + 1) * graph.block_size, v)
-            pull_ptr = np.asarray(graph.row_ptr_in, np.int64)[bounds]
             self._pull_raw = (g.src_in, g.dst_in, g.weight_in)
-            self._pull_reducer = BlockedSegmentReducer(
-                din, pull_ptr, num_segments=v,
-                block_size=graph.block_size)
+            self._pull_reducer = cache.get(
+                graph, "pull_reducer", (),
+                lambda: self._build_pull_reducer(graph))
         self.n_chunks = n_chunks
+
+    @property
+    def graph(self) -> Optional[Graph]:
+        """The host graph this context was built from.
+
+        Directly constructed contexts hold it strongly (always
+        available); cache-owned contexts hold it weakly, so this is
+        ``None`` once such a graph has been garbage-collected.
+        """
+        return self._graph_strong or self._graph_ref()
+
+    @staticmethod
+    def _build_owned_reducer(graph: Graph, owned):
+        from repro.kernels.segment_reduce import BlockedSegmentReducer
+        _, do, _ = owned
+        return BlockedSegmentReducer(
+            np.asarray(do), np.asarray(graph.block_ptr),
+            num_segments=graph.n_nodes, block_size=graph.block_size)
+
+    @staticmethod
+    def _build_pull_reducer(graph: Graph):
+        # Pull-side Pallas fast path: the by-dst (CSC) edge order is
+        # already dst-block-binned (sorted dst => contiguous blocks),
+        # so the blocked reducer applies to *both* coherences — pull
+        # has no atomics for ownership to specialize away.
+        from repro.kernels.segment_reduce import BlockedSegmentReducer
+        v = graph.n_nodes
+        din = np.asarray(graph.dst_in, np.int64)
+        # per-block edge offsets are just row_ptr_in sampled at block
+        # boundaries — no need to re-bin the edge set
+        bounds = np.minimum(
+            np.arange(graph.n_blocks + 1) * graph.block_size, v)
+        pull_ptr = np.asarray(graph.row_ptr_in, np.int64)[bounds]
+        return BlockedSegmentReducer(din, pull_ptr, num_segments=v,
+                                     block_size=graph.block_size)
 
     # ------------------------------------------------------------------
     def resolve_direction(self,
@@ -235,7 +359,11 @@ class EdgeContext:
         only steers the direction heuristic (every source contributes)
         leaves it False and always runs the dense path.
         """
-        dense_occ = jnp.float32(-1.0)
+        # One constant for every dense-marked branch: the early return,
+        # the pull branch and the overflow arm of the push branch all
+        # return this same jnp.float32 scalar (dtype/weak-type symmetry
+        # is what lets the fused while_loop carry the occupancy).
+        dense_occ = dense_occupancy()
         if (self.config.prop is not UpdateProp.PUSH_PULL
                 or phase.frontier is None or not phase.gatherable
                 or self.sparse_edge_capacity == 0):
@@ -361,6 +489,11 @@ class RunResult:
     #: dense iteration) for programs recording FRONTIER_OCC_KEY; None
     #: for programs without the protocol.
     occupancy_trace: Optional[List[float]] = None
+    #: which execution engine produced this result ("fused" | "host").
+    engine: str = "fused"
+    #: timed jitted invocations this run issued: 1 for the fused engine,
+    #: ``iterations`` for the host engine (warmup compiles excluded).
+    dispatches: int = 0
 
     @property
     def sparse_iterations(self) -> Optional[int]:
@@ -379,49 +512,184 @@ class RunResult:
         return program.extract(self.state)
 
 
-def run(program: VertexProgram, graph: Graph, config: SystemConfig,
-        key: Optional[jax.Array] = None, max_iters: Optional[int] = None,
-        use_pallas: bool = False, warmup: bool = True,
-        sparse_edge_capacity: Optional[int] = None) -> RunResult:
-    """Iterate ``program`` on ``graph`` under ``config`` to convergence."""
-    ctx = EdgeContext(graph, config, use_pallas=use_pallas,
-                      sparse_edge_capacity=sparse_edge_capacity)
-    state = program.init(graph, key) if key is not None else program.init(graph)
-    state = jax.tree.map(jnp.asarray, state)
-
-    @partial(jax.jit, donate_argnums=(0,))
-    def step(st, it):
-        new = program.step(ctx, st, it)
-        done = program.converged(st, new)
-        return new, done
-
-    limit = max_iters or program.max_iters
-    if warmup:  # compile outside the timed region (paper times kernels only)
-        # `step` donates its input, so warm the jit cache on a copy.
-        copy = jax.tree.map(lambda x: x.copy(), state)
-        jax.block_until_ready(step(copy, jnp.int32(0)))
+def _trace_flags(program: VertexProgram, state) -> tuple:
     # direction tracing is part of the frontier protocol: the program
     # declares itself frontier-aware via frontier_update and records its
     # per-iteration choice under FRONTIER_DIR_KEY
     traced = (program.frontier_update is not None
               and isinstance(state, dict) and FRONTIER_DIR_KEY in state)
     occ_traced = traced and FRONTIER_OCC_KEY in state
-    trace: List[str] = []
-    occ_trace: List[float] = []
+    return traced, occ_traced
+
+
+def _cached_exec_fn(program: VertexProgram, ctx: EdgeContext,
+                    params: tuple, build):
+    """Fetch a jitted/compiled runner callable through the plan cache.
+
+    A fresh ``jax.jit`` closure per ``run`` call would miss jax's jit
+    cache every time, recompiling the step (host) or the entire fused
+    while_loop per repeat of a sweep — usually the dominant sweep cost.
+    Entries are keyed on ``id(program)`` plus the context/engine params
+    and hold the program strongly, so a program id can never be
+    recycled while its entry is alive; entries die with the graph, and
+    the bucket is LRU-bounded so a stream of distinct program instances
+    on one long-lived graph (e.g. exact BC looping over roots) cannot
+    accumulate unbounded compiled executables.
+    """
+    g = ctx.graph
+    key = (id(program), ctx.config, ctx.use_pallas,
+           ctx.sparse_edge_capacity) + params
+    if g is None:  # graph already collected; nothing to key on
+        return build()[1]
+    return PLAN_CACHE.get(g, "exec_fn", key, build,
+                          capacity=_EXEC_FN_CAPACITY)[1]
+
+
+def _run_host(program: VertexProgram, ctx: EdgeContext, state,
+              limit: int, warmup: bool) -> RunResult:
+    """Kernel-per-iteration oracle engine: one jitted dispatch per step
+    plus a blocking convergence read between steps."""
+
+    def build():
+        @partial(jax.jit, donate_argnums=(0,))
+        def step(st, it):
+            new = program.step(ctx, st, it)
+            done = program.converged(st, new)
+            return new, done
+        if warmup:  # compile outside the timed region (paper times
+            # kernels only).  `step` donates its input, so warm the jit
+            # cache on a copy.  Inside build(): a cached step is already
+            # compiled, so repeats skip the warmup execution too.
+            copy = jax.tree.map(lambda x: x.copy(), state)
+            jax.block_until_ready(step(copy, jnp.int32(0)))
+        return program, step
+
+    step = _cached_exec_fn(program, ctx, ("host",), build)
+    traced, occ_traced = _trace_flags(program, state)
+    # Per-iteration trace scalars are carried off as *async* device
+    # copies (the originals are donated to the next step) and decoded
+    # into host bools/floats only after the timer stops — the timed
+    # region contains no host-blocking trace reads.  Host-vs-fused
+    # timing deltas are then dominated by the per-iteration dispatch +
+    # convergence-sync cost (traced programs additionally enqueue two
+    # scalar copies per iteration here, a second-order effect).
+    dir_raw: List[jax.Array] = []
+    occ_raw: List[jax.Array] = []
     t0 = time.perf_counter()
     it, done = 0, False
     while it < limit:
+        STATS.dispatches += 1
         state, done_dev = step(state, jnp.int32(it))
         it += 1
-        done = bool(done_dev)
         if traced:
-            trace.append("T" if bool(state[FRONTIER_DIR_KEY]) else "S")
+            dir_raw.append(state[FRONTIER_DIR_KEY].copy())
         if occ_traced:
-            occ_trace.append(float(state[FRONTIER_OCC_KEY]))
+            occ_raw.append(state[FRONTIER_OCC_KEY].copy())
+        done = bool(done_dev)  # the host engine's inherent per-step sync
         if done:
             break
     jax.block_until_ready(state)
     dt = time.perf_counter() - t0
+    trace = "".join("T" if bool(d) else "S" for d in dir_raw)
+    occ_trace = [float(o) for o in occ_raw]
     return RunResult(state=state, iterations=it, seconds=dt, converged=done,
-                     direction_trace="".join(trace) if traced else None,
-                     occupancy_trace=occ_trace if occ_traced else None)
+                     direction_trace=trace if traced else None,
+                     occupancy_trace=occ_trace if occ_traced else None,
+                     engine="host", dispatches=it)
+
+
+def _run_fused(program: VertexProgram, ctx: EdgeContext, state,
+               limit: int, warmup: bool) -> RunResult:
+    """Device-resident engine: the whole convergence loop is one jitted
+    ``lax.while_loop`` dispatch with one host sync at the end.
+
+    Carry layout: ``(state, it, done, dir_buf, occ_buf)``.  The trace
+    buffers are preallocated ``[limit]`` device arrays the body writes
+    at index ``it`` via ``lax.dynamic_update_index_in_dim``; after the
+    loop the first ``it`` entries decode to the same
+    ``direction_trace``/``occupancy_trace`` strings/lists the host
+    engine produces, preserving the frontier protocol bit for bit.
+    """
+    traced, occ_traced = _trace_flags(program, state)
+    dir_buf = jnp.zeros((limit,), bool) if traced else None
+    occ_buf = (jnp.full((limit,), dense_occupancy())
+               if occ_traced else None)
+
+    def fused(st, db, ob):
+        def cond(carry):
+            _, it, done, _, _ = carry
+            return (it < limit) & ~done
+
+        def body(carry):
+            st, it, done, db, ob = carry
+            new = program.step(ctx, st, it)
+            done = program.converged(st, new)
+            if traced:
+                db = jax.lax.dynamic_update_index_in_dim(
+                    db, jnp.asarray(new[FRONTIER_DIR_KEY], bool), it, 0)
+            if occ_traced:
+                ob = jax.lax.dynamic_update_index_in_dim(
+                    ob, jnp.asarray(new[FRONTIER_OCC_KEY], jnp.float32),
+                    it, 0)
+            return new, it + jnp.int32(1), done, db, ob
+
+        return jax.lax.while_loop(
+            cond, body,
+            (st, jnp.int32(0), jnp.asarray(False), db, ob))
+
+    def build():
+        fn = jax.jit(fused, donate_argnums=(0, 1, 2))
+        if warmup:
+            # AOT-compile outside the timed region; unlike the host
+            # engine's run-one-step warmup this executes nothing on
+            # device.  The compiled executable is cached per (program,
+            # context, limit) so sweep repeats skip the while_loop
+            # compile entirely.
+            fn = fn.lower(state, dir_buf, occ_buf).compile()
+        return program, fn
+
+    fn = _cached_exec_fn(program, ctx,
+                         ("fused", limit, traced, occ_traced), build)
+    t0 = time.perf_counter()
+    STATS.dispatches += 1
+    state, it_dev, done_dev, dir_buf, occ_buf = fn(state, dir_buf, occ_buf)
+    jax.block_until_ready((state, it_dev, done_dev, dir_buf, occ_buf))
+    dt = time.perf_counter() - t0
+    # the run's single host sync is above; everything below is decoding
+    it = int(it_dev)
+    done = bool(done_dev)
+    trace = None
+    occ_trace = None
+    if traced:
+        trace = "".join("T" if b else "S"
+                        for b in np.asarray(dir_buf)[:it])
+    if occ_traced:
+        occ_trace = [float(o) for o in np.asarray(occ_buf)[:it]]
+    return RunResult(state=state, iterations=it, seconds=dt, converged=done,
+                     direction_trace=trace, occupancy_trace=occ_trace,
+                     engine="fused", dispatches=1)
+
+
+def run(program: VertexProgram, graph: Graph, config: SystemConfig,
+        key: Optional[jax.Array] = None, max_iters: Optional[int] = None,
+        use_pallas: bool = False, warmup: bool = True,
+        sparse_edge_capacity: Optional[int] = None,
+        engine: str = "fused") -> RunResult:
+    """Iterate ``program`` on ``graph`` under ``config`` to convergence.
+
+    ``engine`` picks the convergence loop: ``"fused"`` (default) runs
+    the whole loop on device as one ``lax.while_loop`` dispatch;
+    ``"host"`` is the kernel-per-iteration debugging oracle the fused
+    engine is tested against.  Both produce identical states,
+    iteration counts and traces.
+    """
+    if engine not in ("fused", "host"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "expected 'fused' or 'host'")
+    ctx = EdgeContext.create(graph, config, use_pallas=use_pallas,
+                             sparse_edge_capacity=sparse_edge_capacity)
+    state = program.init(graph, key) if key is not None else program.init(graph)
+    state = jax.tree.map(jnp.asarray, state)
+    limit = max_iters or program.max_iters
+    runner = _run_fused if engine == "fused" else _run_host
+    return runner(program, ctx, state, limit, warmup)

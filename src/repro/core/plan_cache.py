@@ -1,0 +1,141 @@
+"""Amortized construction of per-graph execution-plan artifacts.
+
+Binding a graph to a :class:`~repro.core.executor.EdgeContext` builds
+expensive host-side artifacts: the device-resident edge orders, the
+pre-chunked push/pull arrays, and the blocked Pallas reducers whose
+tiling plans walk the full edge set.  A 12-cell design-space sweep
+(``benchmarks/fig5.py``) binds the *same* graph 12 times (x repeats),
+but most artifacts do not depend on the full config — the CSC chunking
+depends only on ``n_chunks``, the reducers only on the graph — so
+rebuilding them per cell is pure waste on the sweep's critical path.
+
+:class:`PlanCache` is a process-wide store keyed on *graph identity*
+plus an artifact kind and its build parameters.  Graph identity is
+``id(graph)`` guarded by a ``weakref.finalize`` hook that evicts every
+entry of a collected graph, so the cache can never resurrect a plan for
+a recycled ``id``.  Values are built lazily by the caller-supplied
+thunk; hits and misses are counted for tests and benchmarks.
+
+The cache stores two granularities:
+
+- **artifacts** (``"device"``, ``"chunked"``, ``"owned_reducer"``, ...)
+  shared *across* configs of one graph, and
+- whole **contexts** (``"context"``, keyed additionally on the config,
+  ``use_pallas`` and the sparse capacity) so repeated ``run`` calls on
+  the same cell reuse the bound ``EdgeContext`` outright.
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Any, Callable, Dict, Hashable, Tuple
+
+__all__ = ["PlanCache", "PLAN_CACHE"]
+
+
+class PlanCache:
+    """Process-wide (graph, kind, params) -> artifact store with counters."""
+
+    def __init__(self):
+        self._store: Dict[Tuple[int, str, Hashable], Any] = {}
+        self._finalizers: Dict[int, weakref.finalize] = {}
+        #: graph ids whose entries await pruning.  Finalizers only
+        #: append here (an atomic list op): a cyclic-GC pass can run a
+        #: dead graph's finalizer on this same thread *while* we hold
+        #: the lock or iterate ``_store``, so the finalizer itself must
+        #: never lock or mutate the store — pruning happens lazily at
+        #: the top of :meth:`get`, before lookup, so a recycled id can
+        #: never serve a dead graph's entries.
+        self._dead: list = []
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def get(self, graph: Any, kind: str, params: Hashable,
+            build: Callable[[], Any],
+            capacity: int | None = None) -> Any:
+        """Return the cached artifact, building (and caching) on miss.
+
+        ``params`` must capture everything ``build`` depends on besides
+        the graph itself (e.g. ``n_chunks`` for a chunking plan).
+        ``capacity`` optionally bounds how many entries of this
+        ``(graph, kind)`` bucket are retained: on insert, the
+        least-recently-used entries beyond it are evicted (hits refresh
+        recency by reinserting the key) — used for per-program compiled
+        executables, which would otherwise grow without bound across
+        distinct program instances on one long-lived graph.
+        """
+        key = (id(graph), kind, params)
+        with self._lock:
+            self._prune()
+            if key in self._store:
+                self.hits += 1
+                # refresh recency: dict order is the LRU order
+                value = self._store.pop(key)
+                self._store[key] = value
+                return value
+            self.misses += 1
+            self._watch(graph)
+        # build outside the lock: builders may recurse into the cache
+        # (a context builds artifacts), and plans can take a while
+        value = build()
+        with self._lock:
+            value = self._store.setdefault(key, value)
+            if capacity is not None:
+                bucket = [k for k in self._store
+                          if k[0] == key[0] and k[1] == kind]
+                for stale in bucket[:-capacity]:
+                    del self._store[stale]
+            return value
+
+    def _watch(self, graph: Any) -> None:
+        gid = id(graph)
+        if gid not in self._finalizers:
+            self._finalizers[gid] = weakref.finalize(
+                graph, self._evict, gid)
+
+    def _evict(self, gid: int) -> None:
+        # finalizer context: may fire mid-iteration of _store on this
+        # very thread — only queue (list.append is atomic and safe)
+        self._dead.append(gid)
+
+    def _prune(self) -> None:
+        """Drop entries of collected graphs.  Call with the lock held.
+
+        A GC pass during the iteration below can only *append* to
+        ``_dead`` (finalizers never touch ``_store``), so iterating the
+        store here is safe.
+        """
+        while self._dead:
+            gid = self._dead.pop()
+            self._finalizers.pop(gid, None)
+            for key in [k for k in self._store if k[0] == gid]:
+                del self._store[key]
+
+    # ------------------------------------------------------------------
+    def clear(self) -> None:
+        """Drop every entry and reset the hit/miss counters."""
+        with self._lock:
+            for fin in self._finalizers.values():
+                fin.detach()
+            self._finalizers.clear()
+            self._store.clear()
+            self._dead.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            self._prune()
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses}
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._prune()
+            return len(self._store)
+
+
+#: The process-wide cache :class:`~repro.core.executor.EdgeContext` uses.
+PLAN_CACHE = PlanCache()

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.core.properties import TABLE_III, AlgorithmicProperties
 
 __all__ = ["Monoid", "SUM", "MIN", "MAX", "EdgePhase", "VertexProgram",
-           "FRONTIER_DIR_KEY", "FRONTIER_OCC_KEY"]
+           "FRONTIER_DIR_KEY", "FRONTIER_OCC_KEY", "DENSE_OCC",
+           "dense_occupancy"]
 
 State = dict  # str -> jnp.ndarray pytree
 
@@ -34,6 +35,20 @@ FRONTIER_DIR_KEY = "pull"
 #: scan (pull direction, capacity overflow, or a static config).  ``run``
 #: reads it back per iteration into :attr:`RunResult.occupancy_trace`.
 FRONTIER_OCC_KEY = "sparse_occ"
+
+#: Occupancy value marking a dense O(E) iteration in the
+#: :data:`FRONTIER_OCC_KEY` trace.  Every producer — the executor's
+#: ``propagate_sparse`` branches and the frontier-aware programs' init
+#: states — must construct it through :func:`dense_occupancy` so the
+#: sentinel is one ``jnp.float32`` scalar everywhere (a dtype or
+#: weak-type asymmetry between branches would fail ``lax.cond``/
+#: ``lax.while_loop`` carry matching).
+DENSE_OCC = -1.0
+
+
+def dense_occupancy() -> jnp.ndarray:
+    """The dense-iteration occupancy sentinel as a jnp.float32 scalar."""
+    return jnp.asarray(DENSE_OCC, jnp.float32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,7 @@ __all__ = [
     "powerlaw_graph",
     "grid_graph",
     "random_graph",
+    "rmat_graph",
 ]
 
 
@@ -116,4 +117,33 @@ def random_graph(n: int, n_edges: int, seed: int = 0, weighted: bool = False,
     rng = np.random.default_rng(seed)
     src = rng.integers(0, n, size=n_edges)
     dst = rng.integers(0, n, size=n_edges)
+    return _finish(src, dst, n, rng, weighted, block_size)
+
+
+def rmat_graph(scale: int, edge_factor: int = 8,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19,
+               seed: int = 0, weighted: bool = False,
+               block_size: int = 256) -> Graph:
+    """Graph500-style Recursive-MATrix (R-MAT) graph: 2**scale vertices,
+    ~edge_factor * 2**scale edges before symmetrization/dedup.
+
+    Each edge picks one quadrant of the adjacency matrix per bit level
+    with probabilities (a, b, c, 1-a-b-c); the default Graph500
+    parameters give the skewed, community-structured degree
+    distribution GPU graph benchmarks standardize on — the pinned
+    workload of ``benchmarks/dispatch.py``.
+    """
+    n = 1 << scale
+    e = n * edge_factor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(e, np.int64)
+    dst = np.zeros(e, np.int64)
+    for _ in range(scale):
+        r = rng.random(e)
+        # quadrants in row-major order: (0,0)=a, (0,1)=b, (1,0)=c, (1,1)=d
+        src_bit = (r >= a + b).astype(np.int64)
+        dst_bit = (((r >= a) & (r < a + b))
+                   | (r >= a + b + c)).astype(np.int64)
+        src = (src << 1) | src_bit
+        dst = (dst << 1) | dst_bit
     return _finish(src, dst, n, rng, weighted, block_size)

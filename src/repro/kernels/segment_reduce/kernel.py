@@ -35,22 +35,30 @@ def plan_tiles(block_ptr: np.ndarray, tile_e: int):
     Returns (gather_idx [n_tiles, tile_e] int32 into the binned edge order,
     -1 = padding; tile_block_id [n_tiles]; tile_first [n_tiles]).  Every
     output block gets at least one tile so it is always initialised.
+
+    Fully vectorized numpy bucket arithmetic (no per-block Python loop):
+    this sits on the plan cache's cold path, so an O(n_blocks)
+    interpreted loop would dominate first-touch latency on large graphs.
+    Tile *t* of block *b* gathers edges ``block_ptr[b] + t*tile_e ..``,
+    clipped to the block's edge range with -1 padding.
     """
     block_ptr = np.asarray(block_ptr, np.int64)
     n_blocks = block_ptr.shape[0] - 1
-    gather, tbid, tfirst = [], [], []
-    for b in range(n_blocks):
-        lo, hi = block_ptr[b], block_ptr[b + 1]
-        n = int(hi - lo)
-        n_tiles = max(1, -(-n // tile_e))
-        idx = np.full(n_tiles * tile_e, -1, np.int64)
-        idx[:n] = np.arange(lo, hi)
-        for t in range(n_tiles):
-            gather.append(idx[t * tile_e:(t + 1) * tile_e])
-            tbid.append(b)
-            tfirst.append(1 if t == 0 else 0)
-    return (np.stack(gather).astype(np.int32),
-            np.asarray(tbid, np.int32), np.asarray(tfirst, np.int32))
+    counts = np.diff(block_ptr)
+    # ceil(counts / tile_e), but empty blocks still get one (all-padding)
+    # tile so their output block is initialised
+    tiles_per_block = np.maximum(1, -(-counts // tile_e))
+    n_tiles = int(tiles_per_block.sum())
+    tbid = np.repeat(np.arange(n_blocks, dtype=np.int64), tiles_per_block)
+    first_tile = np.cumsum(tiles_per_block) - tiles_per_block
+    tfirst = np.zeros(n_tiles, np.int32)
+    tfirst[first_tile] = 1
+    # within-block tile ordinal of every tile
+    local = np.arange(n_tiles, dtype=np.int64) - first_tile[tbid]
+    offs = (block_ptr[tbid][:, None] + local[:, None] * tile_e
+            + np.arange(tile_e, dtype=np.int64)[None, :])
+    gather = np.where(offs < block_ptr[tbid + 1][:, None], offs, -1)
+    return (gather.astype(np.int32), tbid.astype(np.int32), tfirst)
 
 
 # ---------------------------------------------------------------------------

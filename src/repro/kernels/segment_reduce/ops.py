@@ -22,6 +22,12 @@ class BlockedSegmentReducer:
     ``segment_ids`` must arrive binned by target block (``Graph.perm_owned``
     order) with ``block_ptr`` giving per-block edge offsets — exactly what
     :class:`repro.graph.Graph` maintains.
+
+    Construction is the expensive part (the vectorized
+    :func:`plan_tiles` plus an O(n_tiles * tile_e) local-id rewrite);
+    ``repro.core.plan_cache.PLAN_CACHE`` therefore caches built reducer
+    instances per graph so a design-space sweep pays the plan exactly
+    once.  ``n_tiles`` exposes the plan size for benchmarks and tests.
     """
 
     def __init__(self, segment_ids: np.ndarray, block_ptr: np.ndarray,
@@ -30,6 +36,8 @@ class BlockedSegmentReducer:
         ids = np.asarray(segment_ids, np.int64)
         self.gather_idx, self.tile_block_id, self.tile_first = plan_tiles(
             block_ptr, tile_e)
+        self.n_tiles = int(self.gather_idx.shape[0])
+        self.tile_e = int(tile_e)
         pad = self.gather_idx < 0
         safe = np.where(pad, 0, self.gather_idx)
         lids = ids[safe] - self.tile_block_id[:, None].astype(np.int64) \
