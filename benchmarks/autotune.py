@@ -1,0 +1,210 @@
+"""Autotuner benchmark: tuned-vs-default us/iteration, tracked as
+``results/BENCH_autotune.json`` from this PR on.
+
+Three pinned degree profiles — the Graph500 R-MAT workload the dispatch
+benchmark also uses, a high-skew power-law graph and a near-regular
+graph — each run BFS across **all 18 addressable configs**
+(``ALL_CONFIGS``) under the fused engine with ``use_pallas=True``,
+once with the static default reducer tiling (``autotune="off"``) and
+once with empirically tuned plans (``autotune="measure"``).  Per cell
+the file records both us/iteration figures and their ratio; per
+workload it records the kernel-level tuning sweeps themselves
+(candidate grid, measured seconds, winner) so the end-to-end ratios are
+reproducible from first principles.
+
+Cells whose tuned context resolves the *same* plans as the default one
+(e.g. the ``S*G`` cells, which use no blocked reducer at all) execute
+the identical compiled program, so the default measurement is reused
+and their ratio is exactly 1.0 — re-timing an identical executable
+would only add noise.
+
+``--smoke`` is the CI job: a tiny graph per profile and a 2-candidate
+grid, exercising the whole tune → cache → run pipeline in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))          # `benchmarks` package
+sys.path.insert(0, str(_ROOT / "src"))  # `repro` package
+
+from repro.algorithms import REGISTRY
+from repro.core import ALL_CONFIGS, SystemConfig, run
+from repro.core.executor import EdgeContext
+from repro.graph import powerlaw_graph, regular_graph, rmat_graph
+from repro.kernels.autotune import (ORDERS, autotune_plan, degree_features,
+                                    degree_signature, persist_tune_result,
+                                    tune)
+
+__all__ = ["run_autotune", "PINNED_WORKLOADS", "SMOKE_WORKLOADS"]
+
+#: The pinned degree profiles — change them and the trajectory restarts.
+PINNED_WORKLOADS = {
+    "rmat": (rmat_graph, dict(scale=10, edge_factor=8, seed=7)),
+    "skew": (powerlaw_graph,
+             dict(n=2048, n_edges=24576, alpha=1.6, seed=5)),
+    "regular": (regular_graph, dict(n=2048, degree=8, seed=5)),
+}
+#: CI smoke profiles: same shapes, tiny sizes.
+SMOKE_WORKLOADS = {
+    "rmat": (rmat_graph, dict(scale=7, edge_factor=8, seed=7)),
+    "skew": (powerlaw_graph, dict(n=384, n_edges=4096, alpha=1.6, seed=5)),
+    "regular": (regular_graph, dict(n=384, degree=6, seed=5)),
+}
+APP = "BFS"
+REPEATS = 5
+
+
+def _best_run(program, g, cfg, repeats, **kw):
+    best = None
+    for _ in range(repeats):
+        r = run(program, g, cfg, use_pallas=True, **kw)
+        if best is None or r.seconds < best.seconds:
+            best = r
+    return best
+
+
+def _cell(result):
+    return {
+        "seconds": result.seconds,
+        "iterations": result.iterations,
+        "us_per_iteration": result.seconds * 1e6
+        / max(result.iterations, 1),
+    }
+
+
+def run_autotune(out_path: str = "results/BENCH_autotune.json",
+                 smoke: bool = False, repeats: int = REPEATS) -> dict:
+    workloads = SMOKE_WORKLOADS if smoke else PINNED_WORKLOADS
+    max_candidates = 2 if smoke else 6
+    program = REGISTRY[APP]()
+    out_workloads = {}
+    for name, (gen, params) in workloads.items():
+        g = gen(weighted=program.weighted, **params)
+        feats = degree_features(g)
+
+        # Kernel-level sweeps, recorded verbatim for reproducibility.
+        # The winner is >= the default by construction (the default is
+        # always one candidate).  The sweep's result seeds the disk
+        # cache (overwriting any stale entry for this signature) so
+        # autotune_plan — and through it every autotune="measure"
+        # context below — recalls exactly this sweep instead of paying
+        # an identical second one; the *resolved* plan the config runs
+        # execute is recorded alongside as ground truth.
+        tuning = {}
+        for order in ORDERS:
+            cap = (EdgeContext.default_sparse_capacity(g)
+                   if order == "gathered" else None)
+            res = tune(g, order=order, repeats=repeats,
+                       max_candidates=max_candidates, cap_e=cap)
+            tuning[order] = {
+                "plan": dict(zip(("tile_e", "block_mult", "block_div",
+                                  "gather_splits"), res.plan.astuple())),
+                "kernel_speedup_vs_default": res.speedup_vs_default,
+                "candidates": [
+                    {"tile_e": p.tile_e, "block_mult": p.block_mult,
+                     "block_div": p.block_div,
+                     "gather_splits": p.gather_splits,
+                     "us": s * 1e6} for p, s in res.measurements],
+            }
+            persist_tune_result(res, cap_e=cap)
+            resolved = autotune_plan(g, order=order, mode="measure",
+                                     repeats=repeats,
+                                     max_candidates=max_candidates,
+                                     cap_e=cap)
+            tuning[order]["resolved_plan"] = dict(zip(
+                ("tile_e", "block_mult", "block_div", "gather_splits"),
+                resolved.astuple()))
+            tuning[order]["resolved_source"] = resolved.source
+
+        configs = {}
+        for cfg in ALL_CONFIGS:
+            config = SystemConfig.from_name(cfg.name)
+            ctx_def = EdgeContext.create(g, config, use_pallas=True)
+            ctx_tuned = EdgeContext.create(g, config, use_pallas=True,
+                                           autotune="measure")
+            default = _best_run(program, g, config, repeats)
+            plans_differ = ctx_tuned.plan_signature != ctx_def.plan_signature
+            if plans_differ:
+                tuned = _best_run(program, g, config, repeats,
+                                  autotune="measure")
+                if tuned.seconds > default.seconds * 0.95:
+                    # near-tie: best-of a second interleaved round for
+                    # both modes so scheduler noise, not tiling, can't
+                    # decide the reported ratio
+                    d2 = _best_run(program, g, config, repeats)
+                    t2 = _best_run(program, g, config, repeats,
+                                   autotune="measure")
+                    default = min(default, d2, key=lambda r: r.seconds)
+                    tuned = min(tuned, t2, key=lambda r: r.seconds)
+            else:
+                # identical resolved plans => identical executable;
+                # reuse the measurement instead of re-timing it
+                tuned = default
+            cell = {"default": _cell(default), "tuned": _cell(tuned),
+                    "plans_differ": plans_differ}
+            cell["speedup"] = (cell["default"]["us_per_iteration"]
+                               / max(cell["tuned"]["us_per_iteration"],
+                                     1e-12))
+            configs[cfg.name] = cell
+
+        speedups = [c["speedup"] for c in configs.values()]
+        out_workloads[name] = {
+            "generator": gen.__name__,
+            "params": params,
+            "n_nodes": g.n_nodes,
+            "n_edges": g.n_edges,
+            "degree_signature": degree_signature(feats),
+            "features": feats,
+            "tuning": tuning,
+            "configs": configs,
+            "summary": {
+                "n_configs": len(configs),
+                "regressions": sum(s < 1.0 for s in speedups),
+                "tuned_cells": sum(c["plans_differ"]
+                                   for c in configs.values()),
+                "geomean_speedup": math.exp(
+                    sum(math.log(s) for s in speedups) / len(speedups)),
+                "max_speedup": max(speedups),
+            },
+        }
+
+    geomeans = {n: w["summary"]["geomean_speedup"]
+                for n, w in out_workloads.items()}
+    result = {
+        "app": APP,
+        "repeats": repeats,
+        "smoke": smoke,
+        "workloads": out_workloads,
+        "summary": {
+            "total_regressions": sum(w["summary"]["regressions"]
+                                     for w in out_workloads.values()),
+            "geomean_by_workload": geomeans,
+            "best_workload_geomean": max(geomeans.values()),
+        },
+    }
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2))
+    s = result["summary"]
+    per_wl = ";".join(f"{n}={v:.2f}x" for n, v in geomeans.items())
+    print(f"autotune_bench,{len(out_workloads) * len(ALL_CONFIGS)},"
+          f"regressions={s['total_regressions']};{per_wl}", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graphs + 2-candidate grid (the CI job)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--out", default="results/BENCH_autotune.json")
+    args = ap.parse_args()
+    repeats = args.repeats if args.repeats is not None else \
+        (2 if args.smoke else REPEATS)
+    run_autotune(out_path=args.out, smoke=args.smoke, repeats=repeats)

@@ -35,9 +35,23 @@ def main() -> None:
                     help="with --json: skip the paper-artifact sections "
                          "and only write BENCH_dispatch.json (CI uses "
                          "this to track the perf trajectory cheaply)")
+    ap.add_argument("--autotune-only", action="store_true",
+                    help="only run the reducer-autotuner benchmark and "
+                         "write results/BENCH_autotune.json (tuned-vs-"
+                         "default us/iteration across the 18 configs on "
+                         "three degree profiles)")
+    ap.add_argument("--autotune-smoke", action="store_true",
+                    help="with --autotune-only: tiny graphs + 2-candidate "
+                         "grid (the CI smoke job)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+
+    if args.autotune_only:
+        from benchmarks.autotune import run_autotune
+        run_autotune(smoke=args.autotune_smoke,
+                     repeats=2 if args.autotune_smoke else 5)
+        return
 
     if args.json or args.dispatch_only:  # --dispatch-only implies --json
         from benchmarks.dispatch import run_dispatch

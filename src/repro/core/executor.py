@@ -77,7 +77,9 @@ from repro.core.plan_cache import PLAN_CACHE
 from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
                                        EdgePhase, Monoid, VertexProgram,
                                        dense_occupancy)
-from repro.kernels.segment_reduce import gathered_segment_reduce
+from repro.kernels.autotune import autotune_plan, build_reducer
+from repro.kernels.segment_reduce import (DEFAULT_PLAN,
+                                          gathered_segment_reduce)
 from repro.graph.structure import Graph
 
 __all__ = ["EdgeContext", "RunResult", "run", "ExecutorStats", "STATS"]
@@ -97,8 +99,31 @@ class ExecutorStats:
     def reset(self) -> None:
         self.dispatches = 0
 
+    @staticmethod
+    def plan_cache() -> dict:
+        """Plan-cache counters, global and per kind.
+
+        ``plan_cache()["by_kind"]["tuned_tiling"]`` is how autotune
+        cache effectiveness (tunes vs recalls) is observed without
+        reaching into :data:`~repro.core.plan_cache.PLAN_CACHE`
+        directly.
+        """
+        return PLAN_CACHE.stats()
+
 
 STATS = ExecutorStats()
+
+
+def _normalize_autotune(autotune) -> str:
+    """Canonicalize the ``autotune=`` knob to 'off'|'heuristic'|'measure'."""
+    if autotune in (None, False, "off"):
+        return "off"
+    if autotune is True:
+        return "measure"
+    if autotune in ("heuristic", "measure"):
+        return autotune
+    raise ValueError(f"unknown autotune mode {autotune!r}; expected "
+                     "'off', 'heuristic', 'measure' or a bool")
 
 #: Max compiled runner executables retained per graph (LRU): generous
 #: for design-space sweeps (18 cells x 2 engines fits), bounded for
@@ -142,9 +167,10 @@ class EdgeContext:
     @classmethod
     def create(cls, graph: Graph, config: SystemConfig,
                use_pallas: bool = False,
-               sparse_edge_capacity: Optional[int] = None) -> "EdgeContext":
+               sparse_edge_capacity: Optional[int] = None,
+               autotune=None) -> "EdgeContext":
         """Cached constructor: reuse the bound context for a repeated
-        (graph, config, use_pallas, capacity) cell.
+        (graph, config, use_pallas, capacity, autotune) cell.
 
         Contexts are immutable after construction, so sharing one across
         ``run`` calls is safe; the underlying artifacts are additionally
@@ -154,10 +180,11 @@ class EdgeContext:
         if sparse_edge_capacity is None:
             sparse_edge_capacity = cls.default_sparse_capacity(graph)
         cap = int(sparse_edge_capacity)
+        mode = _normalize_autotune(autotune)
 
         def build():
             ctx = cls(graph, config, use_pallas=use_pallas,
-                      sparse_edge_capacity=cap)
+                      sparse_edge_capacity=cap, autotune=mode)
             # a cache-owned context must not pin its graph, or the
             # cache's eviction-on-collection could never fire (cache ->
             # context -> graph would keep the graph alive forever)
@@ -165,11 +192,12 @@ class EdgeContext:
             return ctx
 
         return PLAN_CACHE.get(
-            graph, "context", (config, bool(use_pallas), cap), build)
+            graph, "context", (config, bool(use_pallas), cap, mode), build)
 
     def __init__(self, graph: Graph, config: SystemConfig,
                  use_pallas: bool = False,
-                 sparse_edge_capacity: Optional[int] = None):
+                 sparse_edge_capacity: Optional[int] = None,
+                 autotune=None):
         # directly constructed contexts keep their graph alive like any
         # object would; :meth:`create` clears the strong reference on
         # cache-owned contexts so eviction can fire (see build() there)
@@ -177,6 +205,7 @@ class EdgeContext:
         self._graph_ref = weakref.ref(graph)
         self.config = config
         self.use_pallas = use_pallas
+        self.autotune = _normalize_autotune(autotune)
         self.n_nodes = graph.n_nodes
         self.n_edges = graph.n_edges
         cache = PLAN_CACHE
@@ -213,6 +242,18 @@ class EdgeContext:
 
         self._reducer = None
         self._pull_reducer = None
+        # Reducer tiling plans: the static DEFAULT_PLAN unless the
+        # autotune knob asks the degree-aware tuner for this graph's
+        # plan (heuristic: zero-measurement suggest_plan; measure:
+        # empirical candidate sweep, process- and disk-cached).  The
+        # tuner times the "mixed" objective (one MXU sum + one VPU min
+        # per call) because one bound reducer instance serves whatever
+        # monoids the program's phases use.
+        self._gather_plan = None
+        if (config.prop is UpdateProp.PUSH_PULL
+                and self.sparse_edge_capacity > 0):
+            self._gather_plan = self._resolve_plan(
+                graph, "gathered", cap_e=self.sparse_edge_capacity)
         if config.coherence is Coherence.DENOVO:
             owned = cache.get(graph, "edges_owned", (), g.edges_owned)
             self._push_edges = cache.get(graph, "chunked",
@@ -220,9 +261,10 @@ class EdgeContext:
                                          lambda: chunked(owned))
             if use_pallas and config.prop is not UpdateProp.PULL:
                 self._owned_raw = owned
+                plan = self._resolve_plan(graph, "owned")
                 self._reducer = cache.get(
-                    graph, "owned_reducer", (),
-                    lambda: self._build_owned_reducer(graph, owned))
+                    graph, "owned_reducer", plan,
+                    lambda: build_reducer(graph, "owned", plan))
         else:
             self._push_edges = cache.get(
                 graph, "chunked", ("csr", n_chunks),
@@ -234,10 +276,34 @@ class EdgeContext:
         # only build the directions this config can actually execute
         if use_pallas and config.prop is not UpdateProp.PUSH:
             self._pull_raw = (g.src_in, g.dst_in, g.weight_in)
+            plan = self._resolve_plan(graph, "pull")
             self._pull_reducer = cache.get(
-                graph, "pull_reducer", (),
-                lambda: self._build_pull_reducer(graph))
+                graph, "pull_reducer", plan,
+                lambda: build_reducer(graph, "pull", plan))
         self.n_chunks = n_chunks
+
+    def _resolve_plan(self, graph: Graph, order: str,
+                      cap_e: Optional[int] = None):
+        """This context's tiling plan for one edge order."""
+        if self.autotune == "off":
+            return DEFAULT_PLAN
+        if order == "gathered" and self.autotune == "heuristic":
+            # the degree heuristic has no model of the scatter split;
+            # the gathered path keeps its single-scatter default
+            return DEFAULT_PLAN
+        return autotune_plan(graph, order=order, kind="mixed",
+                             mode=self.autotune, cap_e=cap_e)
+
+    @property
+    def plan_signature(self) -> tuple:
+        """Identity of the resolved tiling plans (exec-fn cache key
+        material): two contexts that differ only in tuned plans must
+        not share a compiled runner."""
+        def sig(red):
+            return red.plan.astuple() if red is not None else None
+        return (sig(self._reducer), sig(self._pull_reducer),
+                self._gather_plan.astuple()
+                if self._gather_plan is not None else None)
 
     @property
     def graph(self) -> Optional[Graph]:
@@ -248,31 +314,6 @@ class EdgeContext:
         ``None`` once such a graph has been garbage-collected.
         """
         return self._graph_strong or self._graph_ref()
-
-    @staticmethod
-    def _build_owned_reducer(graph: Graph, owned):
-        from repro.kernels.segment_reduce import BlockedSegmentReducer
-        _, do, _ = owned
-        return BlockedSegmentReducer(
-            np.asarray(do), np.asarray(graph.block_ptr),
-            num_segments=graph.n_nodes, block_size=graph.block_size)
-
-    @staticmethod
-    def _build_pull_reducer(graph: Graph):
-        # Pull-side Pallas fast path: the by-dst (CSC) edge order is
-        # already dst-block-binned (sorted dst => contiguous blocks),
-        # so the blocked reducer applies to *both* coherences — pull
-        # has no atomics for ownership to specialize away.
-        from repro.kernels.segment_reduce import BlockedSegmentReducer
-        v = graph.n_nodes
-        din = np.asarray(graph.dst_in, np.int64)
-        # per-block edge offsets are just row_ptr_in sampled at block
-        # boundaries — no need to re-bin the edge set
-        bounds = np.minimum(
-            np.arange(graph.n_blocks + 1) * graph.block_size, v)
-        pull_ptr = np.asarray(graph.row_ptr_in, np.int64)[bounds]
-        return BlockedSegmentReducer(din, pull_ptr, num_segments=v,
-                                     block_size=graph.block_size)
 
     # ------------------------------------------------------------------
     def resolve_direction(self,
@@ -418,7 +459,8 @@ class EdgeContext:
         msg = phase.vprop(state, sv, wv).astype(dtype)
         ids = jnp.where(keep, tv, -1)
         return gathered_segment_reduce(msg, ids, self.n_nodes,
-                                       phase.monoid.name)
+                                       phase.monoid.name,
+                                       plan=self._gather_plan)
 
     def _propagate(self, state, phase: EdgePhase, direction: UpdateProp,
                    dtype) -> jnp.ndarray:
@@ -538,7 +580,7 @@ def _cached_exec_fn(program: VertexProgram, ctx: EdgeContext,
     """
     g = ctx.graph
     key = (id(program), ctx.config, ctx.use_pallas,
-           ctx.sparse_edge_capacity) + params
+           ctx.sparse_edge_capacity, ctx.plan_signature) + params
     if g is None:  # graph already collected; nothing to key on
         return build()[1]
     return PLAN_CACHE.get(g, "exec_fn", key, build,
@@ -674,7 +716,7 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
         key: Optional[jax.Array] = None, max_iters: Optional[int] = None,
         use_pallas: bool = False, warmup: bool = True,
         sparse_edge_capacity: Optional[int] = None,
-        engine: str = "fused") -> RunResult:
+        engine: str = "fused", autotune=None) -> RunResult:
     """Iterate ``program`` on ``graph`` under ``config`` to convergence.
 
     ``engine`` picks the convergence loop: ``"fused"`` (default) runs
@@ -682,12 +724,22 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
     ``"host"`` is the kernel-per-iteration debugging oracle the fused
     engine is tested against.  Both produce identical states,
     iteration counts and traces.
+
+    ``autotune`` picks the Pallas reducer tiling plans: ``"off"``
+    (default, also ``None``/``False``) keeps the static default tiling;
+    ``"heuristic"`` derives a plan from the graph's degree features
+    with zero measurement; ``"measure"`` (also ``True``) runs the
+    empirical candidate sweep, cached per graph in ``PLAN_CACHE`` and
+    persisted to ``results/autotune_cache.json`` keyed by degree
+    signature, so sweeps and repeat traffic never re-tune.  Tiling is a
+    performance choice only — results are unaffected.
     """
     if engine not in ("fused", "host"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'fused' or 'host'")
     ctx = EdgeContext.create(graph, config, use_pallas=use_pallas,
-                             sparse_edge_capacity=sparse_edge_capacity)
+                             sparse_edge_capacity=sparse_edge_capacity,
+                             autotune=autotune)
     state = program.init(graph, key) if key is not None else program.init(graph)
     state = jax.tree.map(jnp.asarray, state)
     limit = max_iters or program.max_iters

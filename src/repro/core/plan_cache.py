@@ -50,6 +50,12 @@ class PlanCache:
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        #: per-artifact-kind counters: kind -> [hits, misses].  Lets
+        #: cache effectiveness be judged per subsystem (e.g. how often
+        #: ``tuned_tiling`` re-tunes vs recalls) instead of only in
+        #: aggregate; surfaced through :meth:`stats` and
+        #: ``executor.STATS.plan_cache()``.
+        self._by_kind: Dict[str, list] = {}
 
     # ------------------------------------------------------------------
     def get(self, graph: Any, kind: str, params: Hashable,
@@ -69,13 +75,16 @@ class PlanCache:
         key = (id(graph), kind, params)
         with self._lock:
             self._prune()
+            counters = self._by_kind.setdefault(kind, [0, 0])
             if key in self._store:
                 self.hits += 1
+                counters[0] += 1
                 # refresh recency: dict order is the LRU order
                 value = self._store.pop(key)
                 self._store[key] = value
                 return value
             self.misses += 1
+            counters[1] += 1
             self._watch(graph)
         # build outside the lock: builders may recurse into the cache
         # (a context builds artifacts), and plans can take a while
@@ -124,12 +133,32 @@ class PlanCache:
             self._dead.clear()
             self.hits = 0
             self.misses = 0
+            self._by_kind.clear()
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, Any]:
+        """Global and per-kind counters.
+
+        ``by_kind`` maps each artifact kind to its own
+        ``{hits, misses, entries}`` so e.g. autotune cache
+        effectiveness (``tuned_tiling``) is observable independently of
+        the context/exec_fn churn around it.
+        """
         with self._lock:
             self._prune()
+            kinds = {k[1] for k in self._store}
+            by_kind = {
+                kind: {"hits": hm[0], "misses": hm[1],
+                       "entries": sum(1 for k in self._store
+                                      if k[1] == kind)}
+                for kind, hm in self._by_kind.items()
+            }
+            for kind in kinds:  # entries whose counters were cleared
+                by_kind.setdefault(kind, {"hits": 0, "misses": 0,
+                                          "entries": sum(
+                                              1 for k in self._store
+                                              if k[1] == kind)})
             return {"entries": len(self._store), "hits": self.hits,
-                    "misses": self.misses}
+                    "misses": self.misses, "by_kind": by_kind}
 
     def __len__(self) -> int:
         with self._lock:

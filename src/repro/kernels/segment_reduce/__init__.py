@@ -1,10 +1,13 @@
-from repro.kernels.segment_reduce.ops import BlockedSegmentReducer
+from repro.kernels.segment_reduce.ops import (DEFAULT_PLAN,
+                                              BlockedSegmentReducer,
+                                              TilingPlan, coarsen_block_ptr)
 from repro.kernels.segment_reduce.ref import (segment_max_ref,
                                               segment_min_ref,
                                               segment_sum_ref)
 from repro.kernels.segment_reduce.sparse import (gathered_segment_reduce,
                                                  gathered_segment_reduce_ref)
 
-__all__ = ["BlockedSegmentReducer", "segment_sum_ref", "segment_min_ref",
+__all__ = ["BlockedSegmentReducer", "TilingPlan", "DEFAULT_PLAN",
+           "coarsen_block_ptr", "segment_sum_ref", "segment_min_ref",
            "segment_max_ref", "gathered_segment_reduce",
            "gathered_segment_reduce_ref"]

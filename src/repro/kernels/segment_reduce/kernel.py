@@ -41,24 +41,37 @@ def plan_tiles(block_ptr: np.ndarray, tile_e: int):
     interpreted loop would dominate first-touch latency on large graphs.
     Tile *t* of block *b* gathers edges ``block_ptr[b] + t*tile_e ..``,
     clipped to the block's edge range with -1 padding.
+
+    All index arithmetic — including the [n_tiles, tile_e] ``gather``
+    intermediate, the plan's largest array — runs in int32: edge ids fit
+    (the kernels and :class:`~repro.graph.structure.Graph` are int32
+    throughout), and an int64 intermediate would double the plan's host
+    memory traffic exactly when a tuned large-``tile_e`` plan makes the
+    array widest.
     """
-    block_ptr = np.asarray(block_ptr, np.int64)
+    block_ptr = np.asarray(block_ptr)
+    if block_ptr.size and int(block_ptr[-1]) >= np.iinfo(np.int32).max:
+        raise ValueError("plan_tiles: edge count exceeds int32 index range")
+    block_ptr = block_ptr.astype(np.int32)
     n_blocks = block_ptr.shape[0] - 1
     counts = np.diff(block_ptr)
     # ceil(counts / tile_e), but empty blocks still get one (all-padding)
     # tile so their output block is initialised
-    tiles_per_block = np.maximum(1, -(-counts // tile_e))
+    tiles_per_block = np.maximum(1, -(-counts // tile_e)).astype(np.int32)
     n_tiles = int(tiles_per_block.sum())
-    tbid = np.repeat(np.arange(n_blocks, dtype=np.int64), tiles_per_block)
-    first_tile = np.cumsum(tiles_per_block) - tiles_per_block
+    tbid = np.repeat(np.arange(n_blocks, dtype=np.int32), tiles_per_block)
+    first_tile = (np.cumsum(tiles_per_block, dtype=np.int32)
+                  - tiles_per_block)
     tfirst = np.zeros(n_tiles, np.int32)
     tfirst[first_tile] = 1
     # within-block tile ordinal of every tile
-    local = np.arange(n_tiles, dtype=np.int64) - first_tile[tbid]
-    offs = (block_ptr[tbid][:, None] + local[:, None] * tile_e
-            + np.arange(tile_e, dtype=np.int64)[None, :])
-    gather = np.where(offs < block_ptr[tbid + 1][:, None], offs, -1)
-    return (gather.astype(np.int32), tbid.astype(np.int32), tfirst)
+    local = np.arange(n_tiles, dtype=np.int32) - first_tile[tbid]
+    offs = (block_ptr[tbid][:, None]
+            + local[:, None] * np.int32(tile_e)
+            + np.arange(tile_e, dtype=np.int32)[None, :])
+    gather = np.where(offs < block_ptr[tbid + 1][:, None], offs,
+                      np.int32(-1))
+    return (gather, tbid, tfirst)
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,8 @@ jit — values are gathered with a static index array at runtime.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -13,7 +15,88 @@ import jax.numpy as jnp
 from repro.kernels.segment_reduce.kernel import (plan_tiles, seg_minmax_pallas,
                                                  seg_sum_pallas)
 
-__all__ = ["BlockedSegmentReducer"]
+__all__ = ["BlockedSegmentReducer", "TilingPlan", "DEFAULT_PLAN",
+           "coarsen_block_ptr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingPlan:
+    """One point of the blocked-reducer tuning space.
+
+    Hashable (frozen, scalar fields) so it can key plan-cache entries
+    directly.  The defaults reproduce the pre-autotuner static tiling
+    exactly — :data:`DEFAULT_PLAN` is always one candidate of any
+    autotune sweep, so tuning can never do worse than the old
+    hard-coded configuration on the tuner's own measurements.
+
+    - ``tile_e`` — edges per grid step of the blocked kernels (one
+      VMEM-resident gather tile).
+    - ``block_mult`` — output-block coarsening factor: the reducer's
+      segment block covers ``block_mult`` consecutive base blocks
+      (``Graph.block_size`` vertices each).  Coarsening is always sound
+      on block-binned edge orders: a coarse block is a union of
+      consecutive base blocks, so edges sorted by base block are also
+      sorted by coarse block (see :func:`coarsen_block_ptr`).
+    - ``block_div`` — output-block *refinement* factor (blocks of
+      ``base // block_div`` vertices).  Sound only for edge orders
+      sorted by destination (the pull/CSC order): a fully sorted order
+      stays binned under any block partition, whereas the owned order
+      is binned only at base-block granularity.  Mutually exclusive
+      with coarsening.
+    - ``gather_splits`` — how many partial scatters the sparse
+      frontier-gathered reduction splits its ``[cap_e]`` slice into
+      (1 = today's single scatter).
+    - ``source`` — provenance tag ("default" | "heuristic" | "tuned" |
+      "disk"), carried for observability only; excluded from equality
+      so a disk-warmed plan compares equal to the freshly measured one.
+    """
+
+    tile_e: int = 512
+    block_mult: int = 1
+    block_div: int = 1
+    gather_splits: int = 1
+    source: str = dataclasses.field(default="default", compare=False)
+
+    def __post_init__(self):
+        if self.block_mult > 1 and self.block_div > 1:
+            raise ValueError("TilingPlan: block_mult and block_div are "
+                             "mutually exclusive")
+        if min(self.tile_e, self.block_mult, self.block_div,
+               self.gather_splits) < 1:
+            raise ValueError("TilingPlan fields must be >= 1")
+
+    def astuple(self):
+        """The identity-relevant fields (cache/JSON key material)."""
+        return (self.tile_e, self.block_mult, self.block_div,
+                self.gather_splits)
+
+    def block_size(self, base_block_size: int) -> int:
+        """Effective output-block size on a base blocking."""
+        if self.block_div > 1:
+            return max(1, base_block_size * self.block_mult
+                       // self.block_div)
+        return base_block_size * self.block_mult
+
+
+#: The pre-autotuner static tiling every call site used to hard-code.
+DEFAULT_PLAN = TilingPlan()
+
+
+def coarsen_block_ptr(block_ptr: np.ndarray, mult: int) -> np.ndarray:
+    """Per-block edge offsets after merging ``mult`` consecutive blocks.
+
+    Edges binned by base block stay binned under the coarser blocking
+    (each coarse block is a contiguous run of base blocks), so the
+    coarse plan is just the base ``block_ptr`` sampled every ``mult``
+    entries (the final boundary is always kept).
+    """
+    block_ptr = np.asarray(block_ptr)
+    if mult <= 1:
+        return block_ptr
+    n_blocks = block_ptr.shape[0] - 1
+    n_coarse = -(-n_blocks // mult)
+    idx = np.minimum(np.arange(n_coarse + 1) * mult, n_blocks)
+    return block_ptr[idx]
 
 
 class BlockedSegmentReducer:
@@ -32,18 +115,22 @@ class BlockedSegmentReducer:
 
     def __init__(self, segment_ids: np.ndarray, block_ptr: np.ndarray,
                  num_segments: int, block_size: int, tile_e: int = 512,
-                 interpret: bool = True):
-        ids = np.asarray(segment_ids, np.int64)
+                 interpret: bool = True, plan: "TilingPlan | None" = None):
+        self.plan = plan if plan is not None else TilingPlan(tile_e=tile_e)
+        # int32 end to end: the kernels index with int32, and the plan's
+        # [n_tiles, tile_e] arrays are the dominant host/device index
+        # traffic — int64 intermediates would double it (plan_tiles
+        # guards the edge-count range).
+        ids = np.asarray(segment_ids, np.int32)
         self.gather_idx, self.tile_block_id, self.tile_first = plan_tiles(
             block_ptr, tile_e)
         self.n_tiles = int(self.gather_idx.shape[0])
         self.tile_e = int(tile_e)
         pad = self.gather_idx < 0
-        safe = np.where(pad, 0, self.gather_idx)
-        lids = ids[safe] - self.tile_block_id[:, None].astype(np.int64) \
-            * block_size
-        self.lids = jnp.asarray(np.where(pad, -1, lids).astype(np.int32))
-        self.gather = jnp.asarray(safe.astype(np.int32))
+        safe = np.where(pad, np.int32(0), self.gather_idx)
+        lids = ids[safe] - self.tile_block_id[:, None] * np.int32(block_size)
+        self.lids = jnp.asarray(np.where(pad, np.int32(-1), lids))
+        self.gather = jnp.asarray(safe)
         self.pad_mask = jnp.asarray(pad)
         self.tbid = jnp.asarray(self.tile_block_id)
         self.tfirst = jnp.asarray(self.tile_first)
@@ -51,6 +138,33 @@ class BlockedSegmentReducer:
         self.block_size = int(block_size)
         self.num_out_blocks = -(-int(num_segments) // int(block_size))
         self.interpret = bool(interpret)
+
+    @classmethod
+    def from_plan(cls, segment_ids: np.ndarray, block_ptr: np.ndarray,
+                  num_segments: int, base_block_size: int,
+                  plan: "TilingPlan | None" = None,
+                  interpret: bool = True) -> "BlockedSegmentReducer":
+        """Plan-parameterized constructor (the autotuner entry point).
+
+        ``block_ptr``/``base_block_size`` describe the edge order's
+        *base* blocking (``Graph.block_size``); the plan's
+        ``block_mult`` coarsens both consistently before the tiling
+        plan is built, and ``tile_e`` sizes the edge tiles.
+        ``plan=None`` (or :data:`DEFAULT_PLAN`) reproduces the
+        pre-autotuner construction bit for bit.  Refinement
+        (``block_div > 1``) cannot be expressed from a base
+        ``block_ptr`` alone — refined reducers are built from the
+        per-vertex row offsets instead (see
+        :func:`repro.kernels.autotune.build_reducer`).
+        """
+        plan = plan if plan is not None else DEFAULT_PLAN
+        if plan.block_div > 1:
+            raise ValueError("from_plan cannot refine blocks (block_div "
+                             "> 1) from a base block_ptr; build from "
+                             "per-vertex row offsets instead")
+        return cls(segment_ids, coarsen_block_ptr(block_ptr, plan.block_mult),
+                   num_segments, base_block_size * plan.block_mult,
+                   tile_e=plan.tile_e, interpret=interpret, plan=plan)
 
     def _tile_values(self, values: jnp.ndarray, fill) -> jnp.ndarray:
         squeeze = values.ndim == 1

@@ -34,17 +34,48 @@ _OPS = {"sum": segment_sum_ref, "min": segment_min_ref,
         "max": segment_max_ref}
 
 
+_COMBINE = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+
+
 def gathered_segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
-                            num_segments: int, kind: str) -> jnp.ndarray:
+                            num_segments: int, kind: str,
+                            plan=None) -> jnp.ndarray:
     """Reduce a gathered edge subset into ``[num_segments]``.
 
     ``values``/``segment_ids`` are the ``[cap_e]`` gathered slice;
     ``segment_ids < 0`` marks padding or masked-out slots whose values
     are ignored (their value may be arbitrary — no identity substitution
     required).  ``kind`` is the monoid name ('sum' | 'min' | 'max').
+
+    ``plan`` (a :class:`~repro.kernels.segment_reduce.ops.TilingPlan`)
+    optionally splits the slice into ``plan.gather_splits`` independent
+    partial scatters combined elementwise — the gathered path's tunable,
+    analogous to the blocked kernels' ``tile_e``.  ``plan=None`` or
+    ``gather_splits=1`` is the original single scatter.  Min/max and
+    exact (integer-valued) sums are split-invariant; inexact float sums
+    may differ in final ULPs across split counts, exactly like the
+    dense path's chunk schedules.
     """
+    splits = int(getattr(plan, "gather_splits", 1) or 1) if plan else 1
     ids = jnp.where(segment_ids < 0, num_segments, segment_ids)
-    out = _OPS[kind](values, ids, num_segments + 1)
+    if splits <= 1 or splits >= ids.shape[0]:
+        out = _OPS[kind](values, ids, num_segments + 1)
+        return out[:num_segments]
+    e = ids.shape[0]
+    chunk = -(-e // splits)
+    pad = chunk * splits - e
+    if pad:
+        # padding slots route to the trash segment like any masked slot
+        ids = jnp.concatenate(
+            [ids, jnp.full((pad,), num_segments, ids.dtype)])
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad,) + values.shape[1:], values.dtype)])
+    ids = ids.reshape(splits, chunk)
+    values = values.reshape(splits, chunk, *values.shape[1:])
+    combine = _COMBINE[kind]
+    out = _OPS[kind](values[0], ids[0], num_segments + 1)
+    for s in range(1, splits):
+        out = combine(out, _OPS[kind](values[s], ids[s], num_segments + 1))
     return out[:num_segments]
 
 

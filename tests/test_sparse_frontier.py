@@ -162,9 +162,9 @@ class TestSparsePathSystem:
         shapes = []
         orig = ex.gathered_segment_reduce
 
-        def spy(values, segment_ids, num_segments, kind):
+        def spy(values, segment_ids, num_segments, kind, **kwargs):
             shapes.append(values.shape)
-            return orig(values, segment_ids, num_segments, kind)
+            return orig(values, segment_ids, num_segments, kind, **kwargs)
 
         monkeypatch.setattr(ex, "gathered_segment_reduce", spy)
         r = run(bfs(), sf_g, SystemConfig.from_name("DG1"))
