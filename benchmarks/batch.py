@@ -1,0 +1,156 @@
+"""Batched-serving benchmark: batched vs sequential us/graph, tracked as
+``results/BENCH_batch.json`` from this PR on.
+
+The serving scenario the batched executor exists for: many small
+R-MAT graphs (distinct seeds, one padding bucket) answered under every
+addressable config.  For each batch size B in ``SIZES`` and each of the
+18 configs, the file records
+
+- ``seq_us_per_graph`` — per-graph sequential cost: best-of-``repeats``
+  fused ``run()`` seconds per distinct graph, averaged.  Graphs beyond
+  ``--seq-sample`` reuse the sample mean (measuring 64 distinct
+  compiled runners adds minutes of compile time for no information —
+  the per-graph cost is i.i.d. across seeds); each entry records
+  whether its sequential basis was ``measured`` or ``extrapolated``.
+- ``batch_us_per_graph`` — best-of-``repeats`` ``run_batch()`` wall
+  seconds over the whole batch, divided by B (one fused dispatch for
+  the batch; warmup compilation excluded on both sides).
+- their ratio ``speedup`` — the dispatch amortization the batched
+  executor buys.
+
+``--smoke`` is the CI job: B=4 over tiny graphs, exercising pack →
+batch-context → fused batch dispatch → unbatch in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))          # `benchmarks` package
+sys.path.insert(0, str(_ROOT / "src"))  # `repro` package
+
+from repro.algorithms import REGISTRY
+from repro.core import ALL_CONFIGS, SystemConfig, run, run_batch
+from repro.graph import rmat_batch
+
+__all__ = ["run_batch_bench", "PINNED_WORKLOAD", "SMOKE_WORKLOAD",
+           "SIZES", "SMOKE_SIZES"]
+
+#: The pinned workload — change it and the trajectory restarts.
+PINNED_WORKLOAD = dict(scale=6, edge_factor=8, seed=7)
+SMOKE_WORKLOAD = dict(scale=5, edge_factor=8, seed=7)
+APP = "BFS"
+SIZES = (1, 4, 16, 64)
+SMOKE_SIZES = (1, 4)
+REPEATS = 5
+#: How many distinct graphs get their own sequential measurement;
+#: beyond this the sequential basis is the sample mean (extrapolated).
+SEQ_SAMPLE = 16
+
+
+def _geomean(xs):
+    xs = list(xs)
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 1.0
+
+
+def run_batch_bench(out_path: str = "results/BENCH_batch.json",
+                    smoke: bool = False, repeats: int | None = None,
+                    sizes=None, seq_sample: int = SEQ_SAMPLE) -> dict:
+    wl = dict(SMOKE_WORKLOAD if smoke else PINNED_WORKLOAD)
+    sizes = tuple(sizes) if sizes else (SMOKE_SIZES if smoke else SIZES)
+    repeats = repeats or (2 if smoke else REPEATS)
+    program = REGISTRY[APP]()
+    n_graphs = max(sizes)
+    graphs = rmat_batch(n_graphs, weighted=program.weighted, **wl)
+    n_meas = min(n_graphs, seq_sample)
+
+    configs = {}
+    for cfg in ALL_CONFIGS:
+        config = SystemConfig.from_name(cfg.name)
+        seq_best = []
+        for g in graphs[:n_meas]:
+            best = min(run(program, g, config).seconds
+                       for _ in range(repeats))
+            seq_best.append(best)
+        mean_seq = sum(seq_best) / len(seq_best)
+
+        per_b = {}
+        for b in sizes:
+            gs = graphs[:b]
+            if b <= n_meas:
+                seq_total, basis = sum(seq_best[:b]), "measured"
+            else:
+                seq_total = sum(seq_best) + mean_seq * (b - n_meas)
+                basis = "extrapolated"
+            best_bat = None
+            iters = 0
+            for _ in range(repeats):
+                rs = run_batch(program, gs, config)
+                tot = sum(r.seconds for r in rs)
+                if best_bat is None or tot < best_bat:
+                    best_bat = tot
+                    iters = max(r.iterations for r in rs)
+            seq_us = seq_total * 1e6 / b
+            bat_us = best_bat * 1e6 / b
+            per_b[str(b)] = {
+                "seq_us_per_graph": seq_us,
+                "batch_us_per_graph": bat_us,
+                "speedup": seq_us / max(bat_us, 1e-12),
+                "batch_iterations": iters,
+                "sequential_basis": basis,
+            }
+        configs[cfg.name] = per_b
+
+    geomean_by_b = {
+        str(b): _geomean(c[str(b)]["speedup"] for c in configs.values())
+        for b in sizes
+    }
+    headline_b = str(16 if 16 in sizes else max(sizes))
+    result = {
+        "workload": {"generator": "rmat_batch", **wl, "app": APP,
+                     "n_nodes": graphs[0].n_nodes,
+                     "n_edges": graphs[0].n_edges},
+        "app": APP,
+        "smoke": smoke,
+        "repeats": repeats,
+        "sizes": list(sizes),
+        "seq_sample": n_meas,
+        "configs": configs,
+        "summary": {
+            "n_configs": len(configs),
+            "geomean_speedup_by_batch_size": geomean_by_b,
+            "headline_batch_size": int(headline_b),
+            "headline_geomean_speedup": geomean_by_b[headline_b],
+        },
+    }
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2))
+    per_b_str = ";".join(f"B{b}={v:.2f}x" for b, v in geomean_by_b.items())
+    print(f"batch_bench,{len(configs) * len(sizes)},"
+          f"headline_B{headline_b}="
+          f"{result['summary']['headline_geomean_speedup']:.2f}x;"
+          f"{per_b_str}", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graphs, B<=4 (the CI job)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated batch sizes (default 1,4,16,64; "
+                         "smoke 1,4)")
+    ap.add_argument("--seq-sample", type=int, default=SEQ_SAMPLE)
+    ap.add_argument("--out", default="results/BENCH_batch.json")
+    args = ap.parse_args()
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else None)
+    run_batch_bench(out_path=args.out, smoke=args.smoke,
+                    repeats=args.repeats, sizes=sizes,
+                    seq_sample=args.seq_sample)

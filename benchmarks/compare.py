@@ -1,0 +1,215 @@
+"""CI perf-regression gate over the tracked benchmark artifacts.
+
+Diffs the current ``results/BENCH_{dispatch,autotune,batch}.json``
+against committed baselines under ``results/baselines/`` and **fails**
+(exit 1) when an artifact's geomean regression exceeds the threshold
+(default 20%).
+
+What is compared: the **within-run speedup ratios** each artifact
+records — fused-vs-host per config (dispatch), tuned-vs-default per
+workload x config (autotune), batched-vs-sequential per config x batch
+size (batch) — *not* absolute microseconds.  Ratios are measured
+against a same-machine denominator, so a baseline recorded on one
+machine remains meaningful on a differently-provisioned CI runner;
+absolute-time gates would only measure the hardware.  A "regression"
+is therefore a drop in what the subsystem *buys* (e.g. the fused
+engine's advantage shrinking because per-iteration overhead crept
+back), which is exactly the property these artifacts exist to track.
+
+Per metric the regression ratio is ``baseline_speedup /
+current_speedup`` (> 1 means worse); the gate fails an artifact when
+the **geomean** of its ratios exceeds ``1 + threshold`` — single-cell
+noise averages out, systematic slowdowns do not.
+
+Baselines must be *compatible*: same pinned workload parameters and the
+same smoke flag (a smoke run is a different workload, not a noisy
+full run).  Incompatible or missing baselines exit 2 — refresh them
+(see README "Refreshing perf baselines"): run the benchmarks, eyeball
+the numbers, then ``python -m benchmarks.compare --update-baselines``
+and commit the copies under ``results/baselines/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import shutil
+import sys
+from pathlib import Path
+
+__all__ = ["extract_metrics", "fingerprint", "compare_artifact",
+           "compare_dirs", "ARTIFACTS", "DEFAULT_THRESHOLD"]
+
+#: artifact kind -> tracked file name.
+ARTIFACTS = {
+    "dispatch": "BENCH_dispatch.json",
+    "autotune": "BENCH_autotune.json",
+    "batch": "BENCH_batch.json",
+}
+DEFAULT_THRESHOLD = 0.20
+
+
+def extract_metrics(kind: str, data: dict) -> dict:
+    """The artifact's tracked speedup metrics as ``{name: ratio}``."""
+    out = {}
+    if kind == "dispatch":
+        for cfg, cell in data.get("configs", {}).items():
+            out[f"dispatch/{cfg}/fused_speedup"] = cell["fused_speedup"]
+    elif kind == "autotune":
+        for wl, w in data.get("workloads", {}).items():
+            for cfg, cell in w.get("configs", {}).items():
+                out[f"autotune/{wl}/{cfg}/speedup"] = cell["speedup"]
+    elif kind == "batch":
+        for cfg, per_b in data.get("configs", {}).items():
+            for b, cell in per_b.items():
+                out[f"batch/{cfg}/B{b}/speedup"] = cell["speedup"]
+    else:
+        raise ValueError(f"unknown artifact kind {kind!r}")
+    return out
+
+
+def fingerprint(kind: str, data: dict) -> dict:
+    """What must match between baseline and current for the diff to be
+    meaningful: the pinned workload identity and the smoke flag."""
+    if kind == "dispatch":
+        return {"workload": data.get("workload")}
+    if kind == "autotune":
+        return {"smoke": data.get("smoke"),
+                "workloads": {n: {"generator": w.get("generator"),
+                                  "params": w.get("params")}
+                              for n, w in data.get("workloads", {}).items()}}
+    if kind == "batch":
+        return {"smoke": data.get("smoke"),
+                "workload": data.get("workload")}
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+def compare_artifact(kind: str, baseline: dict, current: dict,
+                     threshold: float = DEFAULT_THRESHOLD) -> dict:
+    """Diff one artifact; returns ``{status, geomean_ratio, ratios,
+    worst, n_metrics}`` with status in {"ok", "regression",
+    "incompatible", "empty"}."""
+    if fingerprint(kind, baseline) != fingerprint(kind, current):
+        return {"status": "incompatible", "n_metrics": 0,
+                "geomean_ratio": None, "ratios": {}, "worst": []}
+    base = extract_metrics(kind, baseline)
+    cur = extract_metrics(kind, current)
+    shared = sorted(set(base) & set(cur))
+    ratios = {m: base[m] / max(cur[m], 1e-12) for m in shared}
+    if not ratios:
+        return {"status": "empty", "n_metrics": 0, "geomean_ratio": None,
+                "ratios": {}, "worst": []}
+    geomean = math.exp(sum(math.log(max(r, 1e-12))
+                           for r in ratios.values()) / len(ratios))
+    worst = sorted(ratios.items(), key=lambda kv: -kv[1])[:5]
+    return {
+        "status": "regression" if geomean > 1.0 + threshold else "ok",
+        "n_metrics": len(ratios),
+        "geomean_ratio": geomean,
+        "ratios": ratios,
+        "worst": worst,
+    }
+
+
+def compare_dirs(baseline_dir: str, current_dir: str,
+                 artifacts=None, threshold: float = DEFAULT_THRESHOLD,
+                 allow_missing: bool = False) -> int:
+    """Diff every requested artifact; prints a report, returns the exit
+    code (0 pass, 1 regression, 2 missing/incompatible baseline)."""
+    artifacts = artifacts or list(ARTIFACTS)
+    base_dir, cur_dir = Path(baseline_dir), Path(current_dir)
+    exit_code = 0
+    for kind in artifacts:
+        fname = ARTIFACTS[kind]
+        bpath, cpath = base_dir / fname, cur_dir / fname
+        if not cpath.exists():
+            # a requested artifact the benchmarks did not produce would
+            # silently un-gate itself if this were a pass — fail loudly
+            # (CI runs every benchmark before the gate, so this only
+            # fires when an output path drifted)
+            if allow_missing:
+                print(f"perf-gate {kind}: SKIP (no current {cpath})")
+                continue
+            print(f"perf-gate {kind}: MISSING current {cpath} — did the "
+                  f"benchmark step run (or its --out path drift)?")
+            exit_code = max(exit_code, 2)
+            continue
+        if not bpath.exists():
+            if allow_missing:
+                print(f"perf-gate {kind}: SKIP (no baseline {bpath})")
+                continue
+            print(f"perf-gate {kind}: MISSING baseline {bpath} — run the "
+                  f"benchmarks and `--update-baselines` (see README)")
+            exit_code = max(exit_code, 2)
+            continue
+        baseline = json.loads(bpath.read_text())
+        current = json.loads(cpath.read_text())
+        rep = compare_artifact(kind, baseline, current, threshold)
+        if rep["status"] == "incompatible":
+            print(f"perf-gate {kind}: INCOMPATIBLE baseline (pinned "
+                  f"workload or smoke flag changed) — refresh "
+                  f"results/baselines/{fname}")
+            exit_code = max(exit_code, 2)
+            continue
+        if rep["status"] == "empty":
+            print(f"perf-gate {kind}: SKIP (no shared metrics)")
+            continue
+        gm = rep["geomean_ratio"]
+        line = (f"perf-gate {kind}: geomean_regression="
+                f"{(gm - 1) * 100:+.1f}% over {rep['n_metrics']} metrics "
+                f"(threshold +{threshold * 100:.0f}%)")
+        if rep["status"] == "regression":
+            print(line + " — FAIL")
+            for name, r in rep["worst"]:
+                print(f"  worst: {name} {(r - 1) * 100:+.1f}%")
+            exit_code = max(exit_code, 1)
+        else:
+            print(line + " — ok")
+    return exit_code
+
+
+def update_baselines(baseline_dir: str, current_dir: str,
+                     artifacts=None) -> None:
+    artifacts = artifacts or list(ARTIFACTS)
+    base_dir = Path(baseline_dir)
+    base_dir.mkdir(parents=True, exist_ok=True)
+    for kind in artifacts:
+        src = Path(current_dir) / ARTIFACTS[kind]
+        if src.exists():
+            shutil.copyfile(src, base_dir / ARTIFACTS[kind])
+            print(f"baseline updated: {base_dir / ARTIFACTS[kind]}")
+        else:
+            print(f"baseline NOT updated ({src} missing)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default="results/baselines")
+    ap.add_argument("--current-dir", default="results")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative geomean regression that fails the "
+                         "gate (default 0.20 = 20%%)")
+    ap.add_argument("--artifacts", default=",".join(ARTIFACTS),
+                    help="comma-separated subset of "
+                         + "/".join(ARTIFACTS))
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="skip artifacts without a committed baseline "
+                         "instead of failing")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy the current artifacts over the baselines "
+                         "instead of diffing")
+    args = ap.parse_args(argv)
+    artifacts = [a for a in args.artifacts.split(",") if a]
+    unknown = [a for a in artifacts if a not in ARTIFACTS]
+    if unknown:
+        ap.error(f"unknown artifacts: {unknown}")
+    if args.update_baselines:
+        update_baselines(args.baseline_dir, args.current_dir, artifacts)
+        return 0
+    return compare_dirs(args.baseline_dir, args.current_dir, artifacts,
+                        threshold=args.threshold,
+                        allow_missing=args.allow_missing)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,14 @@ def main() -> None:
     ap.add_argument("--autotune-smoke", action="store_true",
                     help="with --autotune-only: tiny graphs + 2-candidate "
                          "grid (the CI smoke job)")
+    ap.add_argument("--batch-only", action="store_true",
+                    help="only run the batched-serving benchmark and "
+                         "write results/BENCH_batch.json (batched vs "
+                         "sequential us/graph across batch sizes and the "
+                         "18 configs)")
+    ap.add_argument("--batch-smoke", action="store_true",
+                    help="with --batch-only: tiny graphs, B<=4 (the CI "
+                         "smoke job)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -51,6 +59,11 @@ def main() -> None:
         from benchmarks.autotune import run_autotune
         run_autotune(smoke=args.autotune_smoke,
                      repeats=2 if args.autotune_smoke else 5)
+        return
+
+    if args.batch_only:
+        from benchmarks.batch import run_batch_bench
+        run_batch_bench(smoke=args.batch_smoke)
         return
 
     if args.json or args.dispatch_only:  # --dispatch-only implies --json

@@ -2,7 +2,9 @@ from repro.core.config_space import (ALL_CONFIGS, DYNAMIC_CONFIGS,
                                      STATIC_CONFIGS, Coherence, Consistency,
                                      SystemConfig, UpdateProp)
 from repro.core.executor import (STATS, EdgeContext, ExecutorStats,
-                                 RunResult, run)
+                                 RunResult, run, run_batch)
+from repro.core.batch import (BatchedEdgeContext, GraphBatch, bucket_key,
+                              bucket_shape, get_graph_batch, pack_graphs)
 from repro.core.plan_cache import PLAN_CACHE, PlanCache
 from repro.core.frontier import (FrontierEdges, SparseFrontier,
                                  choose_direction, dense_to_sparse,
@@ -22,7 +24,10 @@ from repro.core.vertex_program import (DENSE_OCC, FRONTIER_DIR_KEY,
 __all__ = [
     "ALL_CONFIGS", "DYNAMIC_CONFIGS", "STATIC_CONFIGS",
     "Coherence", "Consistency", "SystemConfig", "UpdateProp",
-    "EdgeContext", "RunResult", "run", "ExecutorStats", "STATS",
+    "EdgeContext", "RunResult", "run", "run_batch", "ExecutorStats",
+    "STATS",
+    "BatchedEdgeContext", "GraphBatch", "bucket_key", "bucket_shape",
+    "get_graph_batch", "pack_graphs",
     "PLAN_CACHE", "PlanCache",
     "FrontierEdges", "SparseFrontier",
     "choose_direction", "dense_to_sparse", "frontier_density",

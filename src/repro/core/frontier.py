@@ -48,9 +48,9 @@ from typing import NamedTuple, Optional
 import jax.numpy as jnp
 
 __all__ = ["ALPHA", "BETA", "frontier_size", "frontier_edges",
-           "frontier_density", "choose_direction", "SparseFrontier",
-           "FrontierEdges", "dense_to_sparse", "sparse_to_dense",
-           "gather_frontier_edges"]
+           "frontier_density", "choose_direction", "choose_direction_batch",
+           "SparseFrontier", "FrontierEdges", "dense_to_sparse",
+           "sparse_to_dense", "gather_frontier_edges"]
 
 #: push->pull trigger: pull once frontier out-edges exceed unexplored/ALPHA.
 ALPHA = 14.0
@@ -90,6 +90,39 @@ def choose_direction(mask: jnp.ndarray, out_degree: jnp.ndarray,
         to_pull = m_f * alpha > n_edges
     else:
         m_u = frontier_edges(unvisited, out_degree)
+        to_pull = m_f * alpha > m_u
+    to_push = n_f * beta < n_nodes
+    prev_pull = jnp.asarray(prev_pull, bool)
+    return jnp.where(prev_pull, ~to_push, to_pull)
+
+
+def choose_direction_batch(mask: jnp.ndarray, out_degree: jnp.ndarray,
+                           n_edges: jnp.ndarray, n_nodes: jnp.ndarray,
+                           prev_pull, unvisited: Optional[jnp.ndarray] = None,
+                           alpha: float = ALPHA,
+                           beta: float = BETA) -> jnp.ndarray:
+    """Row-wise :func:`choose_direction` for a batch of packed graphs.
+
+    ``mask``/``out_degree``/``unvisited`` are ``[B, n_q]`` per-graph rows
+    (graph g padded to the bucket width ``n_q``; padding columns must be
+    False in ``mask``/``unvisited``), ``n_edges``/``n_nodes`` are ``[B]``
+    *true* per-graph sizes and ``prev_pull`` the ``[B]`` hysteresis
+    flags.  Returns ``[B]`` bools (True=pull).
+
+    Every row reproduces the scalar heuristic bit for bit: the frontier
+    statistics are the same int32 sums (restricted to the graph's own
+    columns), and the ``m_f * alpha > ...`` comparisons promote to
+    float32 exactly as the scalar path does for any graph with fewer
+    than 2**24 edges — so a batched run's per-iteration direction trace
+    matches the per-graph sequential traces.
+    """
+    deg = out_degree.astype(jnp.int32)
+    m_f = jnp.sum(jnp.where(mask, deg, 0), axis=1)
+    n_f = jnp.sum(mask.astype(jnp.int32), axis=1)
+    if unvisited is None:
+        to_pull = m_f * alpha > n_edges
+    else:
+        m_u = jnp.sum(jnp.where(unvisited, deg, 0), axis=1)
         to_pull = m_f * alpha > m_u
     to_push = n_f * beta < n_nodes
     prev_pull = jnp.asarray(prev_pull, bool)

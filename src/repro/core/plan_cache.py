@@ -23,6 +23,16 @@ The cache stores two granularities:
 - whole **contexts** (``"context"``, keyed additionally on the config,
   ``use_pallas`` and the sparse capacity) so repeated ``run`` calls on
   the same cell reuse the bound ``EdgeContext`` outright.
+
+The batched serving path adds two kinds: ``"batch_pack"`` (a
+block-diagonal :class:`~repro.core.batch.GraphBatch`, anchored on the
+batch's first member graph and keyed on the member identities — the
+batch pins members ``1..B-1`` strongly so their ids cannot recycle
+under the entry) and ``"batch_context"`` (a bound
+:class:`~repro.core.batch.BatchedEdgeContext`, anchored on the packed
+graph).  Repeat serving traffic over one graph set therefore reuses the
+pack, the bound context and — through ``"exec_fn"`` on the packed
+graph — the compiled whole-batch runner.
 """
 from __future__ import annotations
 

@@ -1,11 +1,11 @@
 from repro.graph.structure import Graph, GraphStats, graph_stats
 from repro.graph.generators import (grid_graph, powerlaw_graph, random_graph,
-                                    regular_graph, rmat_graph)
+                                    regular_graph, rmat_batch, rmat_graph)
 from repro.graph.datasets import PAPER_GRAPHS, PAPER_STATS, paper_graph
 
 __all__ = [
     "Graph", "GraphStats", "graph_stats",
     "grid_graph", "powerlaw_graph", "random_graph", "regular_graph",
-    "rmat_graph",
+    "rmat_batch", "rmat_graph",
     "PAPER_GRAPHS", "PAPER_STATS", "paper_graph",
 ]

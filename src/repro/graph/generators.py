@@ -22,6 +22,7 @@ __all__ = [
     "grid_graph",
     "random_graph",
     "rmat_graph",
+    "rmat_batch",
 ]
 
 
@@ -147,3 +148,24 @@ def rmat_graph(scale: int, edge_factor: int = 8,
         src = (src << 1) | src_bit
         dst = (dst << 1) | dst_bit
     return _finish(src, dst, n, rng, weighted, block_size)
+
+
+def rmat_batch(count: int, scale: int, edge_factor: int = 8,
+               seed: int = 0, scale_spread: int = 0,
+               weighted: bool = False, block_size: int = 256) -> list:
+    """A serving-style batch workload: ``count`` independent R-MAT
+    graphs with per-graph seeds (distinct edge sets, matched degree
+    shape) — the input :func:`repro.core.run_batch` and
+    ``benchmarks/batch.py`` consume.
+
+    ``scale_spread > 0`` draws each graph's scale uniformly from
+    ``[scale, scale + scale_spread]``, producing the *ragged* batches
+    the padding buckets exist for; the default 0 keeps every graph in
+    one bucket so a batch is a single packed dispatch.
+    """
+    rng = np.random.default_rng(seed)
+    scales = (scale + rng.integers(0, scale_spread + 1, size=count)
+              if scale_spread else np.full(count, scale, np.int64))
+    return [rmat_graph(int(s), edge_factor, seed=seed + 1000 + i,
+                       weighted=weighted, block_size=block_size)
+            for i, s in enumerate(scales)]

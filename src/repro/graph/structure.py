@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.segment_reduce.ops import bin_edges_by_block
+
 __all__ = ["Graph", "graph_stats", "GraphStats"]
 
 
@@ -113,13 +115,10 @@ class Graph:
         in_degree = np.diff(row_ptr_in)
 
         # owned order: stable-sort by dst block, preserving by-src order
-        # inside each block (keeps push's dense source reads).
-        n_blocks = (n_nodes + block_size - 1) // block_size
-        blk = d_src // block_size
-        perm_owned = np.argsort(blk, kind="stable")
-        block_ptr = np.zeros(n_blocks + 1, dtype=np.int64)
-        np.add.at(block_ptr, blk + 1, 1)
-        block_ptr = np.cumsum(block_ptr)
+        # inside each block (keeps push's dense source reads) — the
+        # same binning the batched packer applies to packed edge lists
+        perm_owned, block_ptr = bin_edges_by_block(d_src, n_nodes,
+                                                   block_size)
 
         i32 = lambda a: np.asarray(a, dtype=np.int32)
         return cls(

@@ -545,8 +545,16 @@ def autotune_plan(graph, order: str = "owned", kind: str = "mixed",
         result = tune(graph, order=order, kind=kind, dtype=dtype, d=d,
                       repeats=repeats, max_candidates=max_candidates,
                       cap_e=cap_e)
-        persist_tune_result(result, dtype=dtype, d=d, cap_e=cap_e,
-                            cache_path=cache_path)
+        try:
+            persist_tune_result(result, dtype=dtype, d=d, cap_e=cap_e,
+                                cache_path=cache_path)
+        except OSError:
+            # The disk cache is an optimization: a fresh checkout
+            # creates results/ on first write (store_disk_entry mkdirs
+            # defensively), but an unwritable path — e.g. "results"
+            # existing as a plain file, or a read-only serving image —
+            # must cost the persistence, never the run.
+            pass
         return result.plan
 
     return PLAN_CACHE.get(graph, "tuned_tiling", key, build)

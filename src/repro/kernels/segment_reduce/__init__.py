@@ -1,6 +1,7 @@
 from repro.kernels.segment_reduce.ops import (DEFAULT_PLAN,
                                               BlockedSegmentReducer,
-                                              TilingPlan, coarsen_block_ptr)
+                                              TilingPlan, bin_edges_by_block,
+                                              coarsen_block_ptr)
 from repro.kernels.segment_reduce.ref import (segment_max_ref,
                                               segment_min_ref,
                                               segment_sum_ref)
@@ -8,6 +9,7 @@ from repro.kernels.segment_reduce.sparse import (gathered_segment_reduce,
                                                  gathered_segment_reduce_ref)
 
 __all__ = ["BlockedSegmentReducer", "TilingPlan", "DEFAULT_PLAN",
+           "bin_edges_by_block",
            "coarsen_block_ptr", "segment_sum_ref", "segment_min_ref",
            "segment_max_ref", "gathered_segment_reduce",
            "gathered_segment_reduce_ref"]

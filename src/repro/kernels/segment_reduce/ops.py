@@ -16,7 +16,7 @@ from repro.kernels.segment_reduce.kernel import (plan_tiles, seg_minmax_pallas,
                                                  seg_sum_pallas)
 
 __all__ = ["BlockedSegmentReducer", "TilingPlan", "DEFAULT_PLAN",
-           "coarsen_block_ptr"]
+           "coarsen_block_ptr", "bin_edges_by_block"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +97,27 @@ def coarsen_block_ptr(block_ptr: np.ndarray, mult: int) -> np.ndarray:
     n_coarse = -(-n_blocks // mult)
     idx = np.minimum(np.arange(n_coarse + 1) * mult, n_blocks)
     return block_ptr[idx]
+
+
+def bin_edges_by_block(dst: np.ndarray, n_nodes: int,
+                       block_size: int) -> tuple:
+    """Bin an edge list by destination block: ``(perm, block_ptr)``.
+
+    ``perm`` stable-sorts edges by ``dst // block_size`` (preserving the
+    input order inside each block — the property the owned/DeNovo path
+    relies on for dense source reads) and ``block_ptr`` gives per-block
+    edge offsets.  This is the host-side construction behind
+    :class:`~repro.graph.structure.Graph`'s owned order; the batched
+    executor also uses it to re-bin a block-diagonal packed edge list
+    whose per-graph vertex offsets don't align with block boundaries.
+    """
+    dst = np.asarray(dst, np.int64)
+    n_blocks = (int(n_nodes) + block_size - 1) // block_size
+    blk = dst // block_size
+    perm = np.argsort(blk, kind="stable")
+    block_ptr = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.add.at(block_ptr, blk + 1, 1)
+    return perm.astype(np.int32), np.cumsum(block_ptr).astype(np.int32)
 
 
 class BlockedSegmentReducer:

@@ -306,3 +306,41 @@ class TestExecutorKnob:
                    for p, _ in r.measurements)
         assert r.best_seconds <= r.default_seconds
         assert r.speedup_vs_default >= 1.0
+
+
+class TestFreshCheckout:
+    """The autotune disk cache must work from a fresh checkout (no
+    results/ directory yet) and must never crash a run when the cache
+    path is unwritable — persistence is an optimization, not a
+    dependency."""
+
+    def _measured_run(self, graph, monkeypatch, tmp_path, cache_rel):
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setattr(at, "DEFAULT_CACHE_PATH", cache_rel)
+        from repro.algorithms import REGISTRY
+        return run(REGISTRY["BFS"](), graph,
+                   SystemConfig.from_name("TD0"), use_pallas=True,
+                   autotune="measure")
+
+    def test_no_results_dir_is_created(self, monkeypatch, tmp_path):
+        """Fresh checkout: results/ does not exist; a measured run must
+        create it and persist the tuned plan."""
+        g = powerlaw_graph(220, 2200, alpha=1.6, seed=9, weighted=True)
+        assert not (tmp_path / "results").exists()
+        r = self._measured_run(g, monkeypatch, tmp_path,
+                               "results/autotune_cache.json")
+        assert r.converged
+        cache = tmp_path / "results" / "autotune_cache.json"
+        assert cache.exists()
+        assert load_disk_cache(cache)  # at least one persisted entry
+
+    def test_unwritable_cache_path_does_not_crash(self, monkeypatch,
+                                                  tmp_path):
+        """`results` existing as a plain *file* makes the cache dir
+        uncreatable; the run must still succeed, skipping persistence."""
+        g = powerlaw_graph(220, 2200, alpha=1.6, seed=10, weighted=True)
+        (tmp_path / "results").write_text("not a directory")
+        r = self._measured_run(g, monkeypatch, tmp_path,
+                               "results/autotune_cache.json")
+        assert r.converged
+        assert (tmp_path / "results").is_file()  # untouched

@@ -1,0 +1,280 @@
+"""Batched multi-graph serving executor: packing is invisible.
+
+Covers the ISSUE-5 contract: (1) block-diagonal pack/unpack round-trips
+— per-graph slices of the packed edge orders equal the originals and
+padding edges are self-loops confined to padding vertices; (2)
+``run_batch`` results are **bit-identical** to per-graph sequential
+``run()`` (states, iteration counts, convergence flags, direction and
+occupancy traces) across the full addressable config matrix for BFS and
+SSSP; (3) ragged-batch padding invariance — adding graphs to a batch
+never changes another graph's results; (4) bucket keys are stable under
+within-quantum size perturbations; (5) the plan cache amortizes repeat
+batches and the whole batch costs one timed dispatch.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.algorithms import REGISTRY
+from repro.core import (ALL_CONFIGS, PLAN_CACHE, SystemConfig, run,
+                        run_batch)
+from repro.core.batch import (BatchedEdgeContext, GraphBatch, bucket_key,
+                              bucket_shape, get_graph_batch, pack_graphs)
+from repro.core.executor import STATS
+from repro.graph import (random_graph, regular_graph, rmat_batch,
+                         rmat_graph)
+
+CONFIG_NAMES = [c.name for c in ALL_CONFIGS]
+
+
+def _results_identical(s, b):
+    assert b.engine == "batched"
+    assert s.iterations == b.iterations
+    assert s.converged == b.converged
+    assert s.direction_trace == b.direction_trace
+    assert s.occupancy_trace == b.occupancy_trace
+    assert set(s.state) == set(b.state)
+    for k in s.state:
+        assert bool(jnp.array_equal(s.state[k], b.state[k])), k
+
+
+@pytest.fixture(scope="module")
+def mixed_graphs():
+    """Two small graphs of different (n, m) in the SAME padding bucket,
+    so they genuinely pack into one B=2 block-diagonal batch (a
+    different-bucket pair would silently degrade every test here to
+    B=1 singletons)."""
+    from repro.graph import grid_graph
+    graphs = [rmat_graph(5, 8, seed=1, weighted=True),
+              grid_graph(7, seed=0, weighted=True)]
+    assert (graphs[0].n_nodes, graphs[0].n_edges) \
+        != (graphs[1].n_nodes, graphs[1].n_edges)      # ragged...
+    assert bucket_key(graphs[0]) == bucket_key(graphs[1])  # ...one batch
+    return graphs
+
+
+class TestBucketShape:
+    @given(st.integers(1, 1 << 20), st.integers(1, 1 << 22))
+    @settings(max_examples=50, deadline=None)
+    def test_shape_properties(self, n, m):
+        n_q, m_q = bucket_shape(n, m)
+        # quantized shapes cover the graph and are powers of two
+        assert n_q >= n and m_q >= m
+        assert n_q & (n_q - 1) == 0 and m_q & (m_q - 1) == 0
+        assert n_q <= max(2 * n, 16) and m_q <= max(2 * m, 16)
+        # edge padding always has a padding vertex to live on
+        if m_q > m:
+            assert n_q > n
+
+    @given(st.integers(4, 1 << 12), st.integers(4, 1 << 14))
+    @settings(max_examples=50, deadline=None)
+    def test_key_stability_within_quantum(self, n, m):
+        """Perturbing (n, m) without crossing a power-of-two boundary
+        keeps the bucket key — sizes in one quantum batch together."""
+        n_q, m_q = bucket_shape(n, m)
+        n2 = max(n_q // 2 + 1, min(n_q - 1, n + 1))
+        m2 = max(m_q // 2 + 1, min(m_q - 1, m + 1))
+        if bucket_shape(n2, 1)[0] == n_q and bucket_shape(1, m2)[1] == m_q:
+            assert bucket_shape(n2, m2) == (n_q, m_q)
+        # crossing the boundary changes it
+        assert bucket_shape(n_q + 1, m)[0] == 2 * n_q
+
+    def test_key_deterministic_across_instances(self):
+        a = regular_graph(100, 4, seed=1)
+        b = regular_graph(100, 4, seed=2)  # same shape, different edges
+        assert bucket_key(a) == bucket_key(b)
+        assert bucket_key(a) != bucket_key(
+            regular_graph(1000, 4, seed=1))
+
+
+class TestPackRoundtrip:
+    @given(st.integers(0, 500))
+    @settings(max_examples=5, deadline=None)
+    def test_edge_orders_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        graphs = [random_graph(int(rng.integers(20, 90)),
+                               int(rng.integers(60, 400)),
+                               seed=seed + i, weighted=True,
+                               block_size=32)
+                  for i in range(3)]
+        batch = pack_graphs(graphs)
+        p = batch.packed
+        assert p.n_nodes == batch.size * batch.n_q
+        assert p.n_edges == batch.size * batch.m_q
+        for i, g in enumerate(graphs):
+            vo, eo = i * batch.n_q, i * batch.m_q
+            n, m = g.n_nodes, g.n_edges
+            # the real edge rows are the original orders, offset
+            np.testing.assert_array_equal(
+                np.asarray(p.src[eo:eo + m]) - vo, np.asarray(g.src))
+            np.testing.assert_array_equal(
+                np.asarray(p.dst[eo:eo + m]) - vo, np.asarray(g.dst))
+            np.testing.assert_array_equal(
+                np.asarray(p.weight[eo:eo + m]), np.asarray(g.weight))
+            np.testing.assert_array_equal(
+                np.asarray(p.dst_in[eo:eo + m]) - vo,
+                np.asarray(g.dst_in))
+            np.testing.assert_array_equal(
+                np.asarray(p.row_ptr_out[vo:vo + n + 1]) - eo,
+                np.asarray(g.row_ptr_out))
+            np.testing.assert_array_equal(
+                np.asarray(p.row_ptr_in[vo:vo + n + 1]) - eo,
+                np.asarray(g.row_ptr_in))
+            np.testing.assert_array_equal(
+                np.asarray(p.out_degree[vo:vo + n]),
+                np.asarray(g.out_degree))
+            # padding edges are self-loops on padding vertices only
+            pad_src = np.asarray(p.src[eo + m:eo + batch.m_q])
+            pad_dst = np.asarray(p.dst[eo + m:eo + batch.m_q])
+            np.testing.assert_array_equal(pad_src, pad_dst)
+            assert (pad_src >= vo + n).all()
+            assert (pad_src < vo + batch.n_q).all()
+        # block-diagonal: every edge stays inside its graph's range
+        blk_of = np.asarray(p.src) // batch.n_q
+        assert (blk_of == np.asarray(p.dst) // batch.n_q).all()
+
+    def test_state_roundtrip(self, mixed_graphs):
+        batch = pack_graphs(mixed_graphs)
+        rng = np.random.default_rng(0)
+        states = [{"x": jnp.asarray(rng.standard_normal(g.n_nodes)
+                                    .astype(np.float32)),
+                   "flag": jnp.asarray(bool(i % 2)),
+                   "m": jnp.asarray(rng.integers(
+                       0, 9, (g.n_nodes, 3)).astype(np.int32))}
+                  for i, g in enumerate(mixed_graphs)]
+        packed = batch.pack_state(states)
+        assert packed["x"].shape == (batch.n_total,)
+        assert packed["flag"].shape == (batch.size,)
+        assert packed["m"].shape == (batch.n_total, 3)
+        for orig, got in zip(states, batch.unpack_state(packed)):
+            for k in orig:
+                assert bool(jnp.array_equal(orig[k], got[k])), k
+
+    def test_pack_rejects_mixed_block_size(self):
+        with pytest.raises(ValueError, match="block_size"):
+            pack_graphs([regular_graph(50, 4, seed=0, block_size=32),
+                         regular_graph(50, 4, seed=1, block_size=64)])
+
+    def test_pack_rejects_bad_state_shape(self, mixed_graphs):
+        batch = pack_graphs(mixed_graphs)
+        bad = [{"x": jnp.zeros((7,))} for _ in mixed_graphs]
+        with pytest.raises(ValueError, match="per-vertex"):
+            batch.pack_state(bad)
+
+
+class TestBitIdenticalToSequential:
+    """The acceptance core: run_batch == per-graph run(), bit for bit,
+    across every addressable config, for BFS and SSSP."""
+
+    @pytest.fixture(scope="class")
+    def apps(self, mixed_graphs):
+        out = {}
+        for name in ("BFS", "SSSP"):
+            prog = REGISTRY[name]()
+            out[name] = (prog, mixed_graphs)
+        return out
+
+    @pytest.mark.parametrize("cfg", CONFIG_NAMES)
+    @pytest.mark.parametrize("app", ["BFS", "SSSP"])
+    def test_matrix(self, apps, app, cfg):
+        prog, graphs = apps[app]
+        config = SystemConfig.from_name(cfg)
+        seq = [run(prog, g, config) for g in graphs]
+        bat = run_batch(prog, graphs, config)
+        for s, b in zip(seq, bat):
+            _results_identical(s, b)
+
+    def test_iteration_counts_differ_per_graph(self):
+        """Per-graph convergence masking: a long-diameter graph and a
+        short one in the same batch keep their own iteration counts."""
+        from repro.graph import grid_graph
+        prog = REGISTRY["BFS"]()
+        graphs = [grid_graph(7, seed=0), rmat_graph(5, 8, seed=3)]
+        assert bucket_key(graphs[0]) == bucket_key(graphs[1])  # one batch
+        config = SystemConfig.from_name("DG0")
+        bat = run_batch(prog, graphs, config)
+        seq = [run(prog, g, config) for g in graphs]
+        assert [r.iterations for r in bat] == \
+            [r.iterations for r in seq]
+        assert bat[0].iterations != bat[1].iterations
+        for s, b in zip(seq, bat):
+            _results_identical(s, b)
+
+
+class TestRaggedPaddingInvariance:
+    """Adding a (padded) graph to a batch never changes another
+    graph's results — block-diagonal packing keeps graphs disjoint."""
+
+    @pytest.mark.parametrize("cfg", ["DG1", "SG0"])
+    def test_batch_composition_invariance(self, cfg):
+        from repro.graph import grid_graph
+        prog = REGISTRY["BFS"]()
+        g1 = rmat_graph(5, 8, seed=11)
+        g2 = grid_graph(7, seed=12)          # same bucket: duo packs B=2
+        g3 = regular_graph(40, 5, seed=13)   # different bucket
+        assert bucket_key(g1) == bucket_key(g2)
+        assert bucket_key(g1) != bucket_key(g3)
+        config = SystemConfig.from_name(cfg)
+        solo = run_batch(prog, [g1], config)[0]
+        duo = run_batch(prog, [g1, g2], config)[0]
+        trio = run_batch(prog, [g1, g3, g2], config)[0]
+        _results_identical(solo, duo)
+        _results_identical(solo, trio)
+
+    def test_multi_bucket_and_max_batch(self):
+        """Graphs spanning buckets (and max_batch splits) still return
+        sequential-identical results in input order."""
+        prog = REGISTRY["BFS"]()
+        graphs = [rmat_graph(5, 8, seed=21),
+                  rmat_graph(8, 8, seed=22),   # far bigger: own bucket
+                  rmat_graph(5, 8, seed=23),
+                  rmat_graph(5, 8, seed=24)]
+        config = SystemConfig.from_name("DGR")
+        bat = run_batch(prog, graphs, config, max_batch=2)
+        for g, b in zip(graphs, bat):
+            _results_identical(run(prog, g, config), b)
+
+
+class TestServingAmortization:
+    def test_one_dispatch_per_batch(self):
+        prog = REGISTRY["BFS"]()
+        graphs = rmat_batch(4, 5, seed=31)
+        config = SystemConfig.from_name("DG1")
+        run_batch(prog, graphs, config)  # warm compile + caches
+        STATS.reset()
+        rs = run_batch(prog, graphs, config)
+        assert STATS.dispatches == 1           # whole batch, one dispatch
+        assert all(r.dispatches == 1 for r in rs)
+        assert all(r.engine == "batched" for r in rs)
+
+    def test_repeat_traffic_hits_plan_cache(self):
+        prog = REGISTRY["BFS"]()
+        graphs = rmat_batch(3, 5, seed=41)
+        config = SystemConfig.from_name("DG0")
+        run_batch(prog, graphs, config)
+        before = PLAN_CACHE.stats()["by_kind"]
+        b_pack = dict(before.get("batch_pack", {}))
+        b_ctx = dict(before.get("batch_context", {}))
+        run_batch(prog, graphs, config)
+        after = PLAN_CACHE.stats()["by_kind"]
+        assert after["batch_pack"]["hits"] == b_pack.get("hits", 0) + 1
+        assert after["batch_pack"]["misses"] == b_pack.get("misses", 0)
+        assert after["batch_context"]["hits"] == b_ctx.get("hits", 0) + 1
+
+    def test_batch_reuses_pack_for_same_tuple_only(self):
+        graphs = rmat_batch(2, 5, seed=51)
+        b1 = get_graph_batch(tuple(graphs))
+        assert get_graph_batch(tuple(graphs)) is b1
+        assert get_graph_batch(tuple(reversed(graphs))) is not b1
+
+    def test_sparse_capacity_zero_disables_batchwide(self):
+        prog = REGISTRY["BFS"]()
+        graphs = rmat_batch(2, 5, seed=61)
+        config = SystemConfig.from_name("DG1")
+        seq = [run(prog, g, config, sparse_edge_capacity=0)
+               for g in graphs]
+        bat = run_batch(prog, graphs, config, sparse_edge_capacity=0)
+        for s, b in zip(seq, bat):
+            _results_identical(s, b)
+            assert all(o == -1.0 for o in b.occupancy_trace)

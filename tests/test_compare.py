@@ -1,0 +1,156 @@
+"""The CI perf-regression gate (benchmarks/compare.py).
+
+The gate diffs within-run speedup metrics against committed baselines
+and must: pass on unchanged numbers, fail (exit 1) on an injected 2x
+regression, refuse (exit 2) incompatible or missing baselines, and
+tolerate single-cell noise that the geomean absorbs.
+"""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.compare import (ARTIFACTS, compare_artifact, compare_dirs,
+                                extract_metrics, update_baselines)
+
+
+def _dispatch_artifact(speedup=1.5):
+    return {
+        "workload": {"generator": "rmat", "scale": 10, "seed": 7},
+        "configs": {c: {"fused_speedup": speedup,
+                        "host": {}, "fused": {}}
+                    for c in ("SG0", "TG0", "DG1", "DDR")},
+        "summary": {},
+    }
+
+
+def _batch_artifact(speedup=2.0):
+    return {
+        "workload": {"generator": "rmat_batch", "scale": 6, "seed": 7},
+        "smoke": False,
+        "configs": {c: {"1": {"speedup": 1.0},
+                        "16": {"speedup": speedup}}
+                    for c in ("SG0", "DG1")},
+    }
+
+
+def _autotune_artifact(speedup=1.3):
+    return {
+        "smoke": True,
+        "workloads": {
+            "rmat": {"generator": "rmat_graph",
+                     "params": {"scale": 7},
+                     "configs": {c: {"speedup": speedup}
+                                 for c in ("SG0", "TD0")}},
+        },
+    }
+
+
+class TestExtractAndCompare:
+    def test_extract_metric_names(self):
+        m = extract_metrics("dispatch", _dispatch_artifact())
+        assert m["dispatch/SG0/fused_speedup"] == 1.5
+        m = extract_metrics("batch", _batch_artifact())
+        assert m["batch/DG1/B16/speedup"] == 2.0
+        m = extract_metrics("autotune", _autotune_artifact())
+        assert m["autotune/rmat/TD0/speedup"] == 1.3
+        with pytest.raises(ValueError):
+            extract_metrics("nope", {})
+
+    def test_identical_passes(self):
+        base = _dispatch_artifact()
+        rep = compare_artifact("dispatch", base, copy.deepcopy(base))
+        assert rep["status"] == "ok"
+        assert rep["geomean_ratio"] == pytest.approx(1.0)
+
+    def test_injected_2x_regression_fails(self):
+        base = _batch_artifact(speedup=2.0)
+        cur = _batch_artifact(speedup=1.0)  # batched advantage halved
+        rep = compare_artifact("batch", base, cur)
+        assert rep["status"] == "regression"
+        # only the B16 cells regressed (2x); B1 cells unchanged
+        assert rep["geomean_ratio"] == pytest.approx(2.0 ** 0.5)
+        assert rep["worst"][0][1] == pytest.approx(2.0)
+
+    def test_single_cell_noise_is_absorbed_by_geomean(self):
+        base = _dispatch_artifact(speedup=1.5)
+        cur = copy.deepcopy(base)
+        cur["configs"]["SG0"]["fused_speedup"] = 1.2  # one noisy cell
+        rep = compare_artifact("dispatch", base, cur)
+        assert rep["status"] == "ok"
+
+    def test_uniform_regression_beyond_threshold_fails(self):
+        base = _dispatch_artifact(speedup=1.5)
+        cur = _dispatch_artifact(speedup=1.5 / 1.3)  # 30% everywhere
+        assert compare_artifact("dispatch", base, cur)["status"] \
+            == "regression"
+
+    def test_improvement_passes(self):
+        base = _dispatch_artifact(speedup=1.5)
+        cur = _dispatch_artifact(speedup=3.0)
+        rep = compare_artifact("dispatch", base, cur)
+        assert rep["status"] == "ok"
+        assert rep["geomean_ratio"] < 1.0
+
+    def test_changed_workload_is_incompatible(self):
+        base = _batch_artifact()
+        cur = _batch_artifact()
+        cur["workload"]["scale"] = 7  # pinned workload moved
+        assert compare_artifact("batch", base, cur)["status"] \
+            == "incompatible"
+        cur = _autotune_artifact()
+        cur["smoke"] = False  # smoke vs full are different workloads
+        assert compare_artifact("autotune", _autotune_artifact(),
+                                cur)["status"] == "incompatible"
+
+
+class TestCompareDirs:
+    def _write(self, d, kind, artifact):
+        d.mkdir(parents=True, exist_ok=True)
+        (d / ARTIFACTS[kind]).write_text(json.dumps(artifact))
+
+    def test_end_to_end_pass_and_injected_fail(self, tmp_path):
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(base, "dispatch", _dispatch_artifact(1.5))
+        self._write(cur, "dispatch", _dispatch_artifact(1.45))  # noise
+        assert compare_dirs(base, cur, ["dispatch"]) == 0
+        # inject a 2x regression across the board -> exit 1
+        self._write(cur, "dispatch", _dispatch_artifact(0.75))
+        assert compare_dirs(base, cur, ["dispatch"]) == 1
+
+    def test_missing_baseline_fails_unless_allowed(self, tmp_path):
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(cur, "batch", _batch_artifact())
+        assert compare_dirs(base, cur, ["batch"]) == 2
+        assert compare_dirs(base, cur, ["batch"],
+                            allow_missing=True) == 0
+
+    def test_missing_current_fails_unless_allowed(self, tmp_path):
+        """A requested artifact the benchmarks didn't produce must not
+        silently un-gate itself (e.g. an --out path drift)."""
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(base, "batch", _batch_artifact())
+        cur.mkdir()
+        assert compare_dirs(base, cur, ["batch"]) == 2
+        assert compare_dirs(base, cur, ["batch"],
+                            allow_missing=True) == 0
+
+    def test_incompatible_baseline_exits_2(self, tmp_path):
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(base, "autotune", _autotune_artifact())
+        changed = _autotune_artifact()
+        changed["workloads"]["rmat"]["params"] = {"scale": 9}
+        self._write(cur, "autotune", changed)
+        assert compare_dirs(base, cur, ["autotune"]) == 2
+
+    def test_update_baselines_copies(self, tmp_path):
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(cur, "dispatch", _dispatch_artifact())
+        update_baselines(base, cur, ["dispatch", "batch"])
+        assert (base / ARTIFACTS["dispatch"]).exists()
+        assert not (base / ARTIFACTS["batch"]).exists()
+        assert compare_dirs(base, cur, ["dispatch"]) == 0
