@@ -1,6 +1,6 @@
 """CI perf-regression gate over the tracked benchmark artifacts.
 
-Diffs the current ``results/BENCH_{dispatch,autotune,batch}.json``
+Diffs the current ``results/BENCH_{dispatch,autotune,batch,matrix}.json``
 against committed baselines under ``results/baselines/`` and **fails**
 (exit 1) when an artifact's geomean regression exceeds the threshold
 (default 20%).
@@ -8,7 +8,8 @@ against committed baselines under ``results/baselines/`` and **fails**
 What is compared: the **within-run speedup ratios** each artifact
 records — fused-vs-host per config (dispatch), tuned-vs-default per
 workload x config (autotune), batched-vs-sequential per config x batch
-size (batch) — *not* absolute microseconds.  Ratios are measured
+size (batch), best-config-vs-TG0 per workload (matrix) — *not*
+absolute microseconds.  Ratios are measured
 against a same-machine denominator, so a baseline recorded on one
 machine remains meaningful on a differently-provisioned CI runner;
 absolute-time gates would only measure the hardware.  A "regression"
@@ -45,6 +46,7 @@ ARTIFACTS = {
     "dispatch": "BENCH_dispatch.json",
     "autotune": "BENCH_autotune.json",
     "batch": "BENCH_batch.json",
+    "matrix": "BENCH_matrix.json",
 }
 DEFAULT_THRESHOLD = 0.20
 
@@ -63,6 +65,10 @@ def extract_metrics(kind: str, data: dict) -> dict:
         for cfg, per_b in data.get("configs", {}).items():
             for b, cell in per_b.items():
                 out[f"batch/{cfg}/B{b}/speedup"] = cell["speedup"]
+    elif kind == "matrix":
+        for wl, cell in data.get("cells", {}).items():
+            out[f"matrix/{wl}/specialization_gain"] = (
+                cell["specialization_gain"])
     else:
         raise ValueError(f"unknown artifact kind {kind!r}")
     return out
@@ -81,6 +87,13 @@ def fingerprint(kind: str, data: dict) -> dict:
     if kind == "batch":
         return {"smoke": data.get("smoke"),
                 "workload": data.get("workload")}
+    if kind == "matrix":
+        # input sources matter: a run against real fetched graphs is a
+        # different workload than one against the synthetic stand-ins
+        return {"smoke": data.get("smoke"),
+                "workload": data.get("workload"),
+                "sources": {n: i.get("source")
+                            for n, i in data.get("inputs", {}).items()}}
     raise ValueError(f"unknown artifact kind {kind!r}")
 
 

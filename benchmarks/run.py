@@ -51,9 +51,22 @@ def main() -> None:
     ap.add_argument("--batch-smoke", action="store_true",
                     help="with --batch-only: tiny graphs, B<=4 (the CI "
                          "smoke job)")
+    ap.add_argument("--matrix-only", action="store_true",
+                    help="only run the 6-app x 6-input workload matrix "
+                         "and write results/BENCH_matrix.json (per-cell "
+                         "seconds across the design-space configs plus "
+                         "each workload's specialization gain over TG0)")
+    ap.add_argument("--matrix-smoke", action="store_true",
+                    help="with --matrix-only: tiny stand-ins, reduced "
+                         "config set (the CI smoke job)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+
+    if args.matrix_only:
+        from benchmarks.matrix import run_matrix
+        run_matrix(smoke=args.matrix_smoke)
+        return
 
     if args.autotune_only:
         from benchmarks.autotune import run_autotune

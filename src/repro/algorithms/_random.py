@@ -1,0 +1,24 @@
+"""Default-key derivation for programs with randomized init.
+
+``coloring``/``mis`` draw random priorities in ``init``.  Their old
+default fallback (``jax.random.key(const)``) handed *every* graph the
+same key, correlating tie-breaks across supposedly independent graphs —
+in a batch, every bucket member selected the same vertex ranks.
+``graph_key`` folds a stable per-graph datum (the graph's exact size)
+into a salted base key so two different graphs draw different
+priorities by default; ``run_batch`` goes further and folds the batch
+index in (see :func:`repro.core.executor.run_batch`), decorrelating
+even same-shape graphs.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["graph_key"]
+
+
+def graph_key(graph, salt: int) -> jax.Array:
+    """Stable default PRNG key for one graph: fold its (n, m) identity
+    into a per-algorithm salted base key."""
+    datum = (int(graph.n_nodes) * 1000003 + int(graph.n_edges)) % (2 ** 31)
+    return jax.random.fold_in(jax.random.key(salt), datum)

@@ -11,10 +11,19 @@ Both stages are frontier phases: forward's frontier is the current BFS
 level (with the unvisited set feeding the alpha test), backward's is the
 level being drained.  Dynamic configs therefore direction-optimize both
 sweeps; static configs constant-fold the choice.
+
+Batch-ready layout: ``cur_level``/``phase`` are per-graph scalars
+(``[B]`` when batched), so the phases compare depths against the
+per-vertex broadcast ``st["lvl"] = ctx.per_vertex(cur_level)`` that
+``step`` injects, and the forward/backward split goes through
+``ctx.cond_per_graph`` (sequentially a ``lax.cond``; batched, graphs
+flip phases at different iterations, so both branches execute and each
+graph's rows keep their own).  Padding depth rows are ``state_pad``-ed
+to -2 — never equal to any level and never "unvisited" (-1), so padding
+neither joins frontiers nor inflates the alpha test's unexplored count.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
@@ -25,21 +34,24 @@ __all__ = ["bc"]
 
 
 def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
+    # phases read the per-vertex level broadcast st["lvl"] (injected by
+    # step), not the per-graph scalar cur_level: [B]-shaped scalars
+    # cannot compare against [B*n_q] depth rows directly
     fwd = EdgePhase(
         monoid=SUM,
         vprop=lambda st, src, w: st["sigma"][src],
-        spred=lambda st, src: st["depth"][src] == st["cur_level"],
+        spred=lambda st, src: st["depth"][src] == st["lvl"][src],
         tpred=lambda st, dst: st["depth"][dst] == -1,
-        frontier=lambda st: st["depth"] == st["cur_level"],
+        frontier=lambda st: st["depth"] == st["lvl"],
         gatherable=True,  # spred == frontier membership
     )
     bwd = EdgePhase(
         monoid=SUM,
         vprop=lambda st, src, w: (1.0 + st["delta"][src])
         / jnp.maximum(st["sigma"][src], 1e-30),
-        spred=lambda st, src: st["depth"][src] == st["cur_level"] + 1,
-        tpred=lambda st, dst: st["depth"][dst] == st["cur_level"],
-        frontier=lambda st: st["depth"] == st["cur_level"] + 1,
+        spred=lambda st, src: st["depth"][src] == st["lvl"][src] + 1,
+        tpred=lambda st, dst: st["depth"][dst] == st["lvl"][dst],
+        frontier=lambda st: st["depth"] == st["lvl"] + 1,
         gatherable=True,  # spred == frontier membership
     )
 
@@ -62,9 +74,9 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
                                         unvisited=st["depth"] == -1)
             contrib, occ = ctx.propagate_sparse(st, fwd, pull)
             newly = (st["depth"] == -1) & (contrib > 0)
-            depth = jnp.where(newly, st["cur_level"] + 1, st["depth"])
+            depth = jnp.where(newly, st["lvl"] + 1, st["depth"])
             sigma = jnp.where(newly, contrib, st["sigma"])
-            any_new = jnp.any(newly)
+            any_new = ctx.per_graph_any(newly)
             # forward done -> deepest level is cur_level; backward starts
             # one above the deepest (its delta is identically zero).
             return {
@@ -80,14 +92,17 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
             pull = ctx.choose_direction(bwd.frontier(st),
                                         st[FRONTIER_DIR_KEY])
             red, occ = ctx.propagate_sparse(st, bwd, pull)
-            hit = st["depth"] == st["cur_level"]
+            hit = st["depth"] == st["lvl"]
             delta = jnp.where(hit, st["sigma"] * red, st["delta"])
             return {**st, "delta": delta,
                     "cur_level": (st["cur_level"] - 1).astype(jnp.int32),
                     FRONTIER_DIR_KEY: pull,
                     FRONTIER_OCC_KEY: occ}
 
-        return jax.lax.cond(st["phase"] == 0, forward, backward, st)
+        st = {**st, "lvl": ctx.per_vertex(st["cur_level"])}
+        out = ctx.cond_per_graph(st["phase"] == 0, forward, backward, st)
+        out.pop("lvl")
+        return out
 
     def converged(prev, cur):
         return (cur["phase"] == 1) & (cur["cur_level"] < 0)
@@ -102,4 +117,6 @@ def bc(root: int = 0, max_iters: int = 4096) -> VertexProgram:
         frontier_init=lambda g: jnp.zeros((g.n_nodes,), bool)
         .at[root].set(True),
         frontier_update=lambda st: st["depth"] == st["cur_level"],
+        # padding depth must equal no level and never read "unvisited"
+        state_pad={"depth": -2},
     )

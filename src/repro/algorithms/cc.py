@@ -6,14 +6,27 @@ direction per round (the paper's "non-deterministic source/target
 direction"), and (2) *pointer jumping* — label[v] <- label[label[v]],
 which chases transitive edges that are NOT in the input graph: the
 data-dependent, dynamic traversal that precludes a static push/pull choice.
+
+The alternating direction goes through ``ctx.dynamic_direction`` and is
+recorded under ``FRONTIER_DIR_KEY`` — the old code passed
+``direction=PUSH/PULL`` straight to ``ctx.propagate``, bypassing the
+trace, so ``RunResult.direction_trace`` (and fig5's D*-cell direction
+reporting) was silently empty for CC.  Static configs still fold the
+wish to their fixed direction (the trace reports what actually ran).
+
+Labels are *local* vertex ids; pointer jumping indexes the label array
+with them, so under ``run_batch`` the packed row of a label is
+``label + vertex_offset``.  ``ctx.vertex_offsets()`` supplies the shift
+(a constant 0 sequentially) — without it, batched jumping would chase
+graph i's labels through graph 0's rows.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.config_space import UpdateProp
-from repro.core.vertex_program import MIN, EdgePhase, VertexProgram
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       MIN, EdgePhase, VertexProgram,
+                                       dense_occupancy)
 
 __all__ = ["cc"]
 
@@ -28,23 +41,23 @@ def cc(max_iters: int = 512) -> VertexProgram:
 
     def init(graph, key=None):
         v = graph.n_nodes
-        return {"label": jnp.arange(v, dtype=jnp.int32)}
+        return {"label": jnp.arange(v, dtype=jnp.int32),
+                FRONTIER_DIR_KEY: jnp.asarray(False),
+                FRONTIER_OCC_KEY: dense_occupancy()}
 
     def step(ctx, st, it):
         # hooking: racy min-label updates; direction alternates per round
-        # (lax.cond executes exactly one branch at runtime)
-        nbr_min = jax.lax.cond(
-            it % 2 == 0,
-            lambda s: ctx.propagate(s, phase, direction=UpdateProp.PUSH,
-                                    dtype=jnp.int32),
-            lambda s: ctx.propagate(s, phase, direction=UpdateProp.PULL,
-                                    dtype=jnp.int32),
-            st)
+        pull = ctx.dynamic_direction((it % 2) == 1)
+        nbr_min, occ = ctx.propagate_sparse(st, phase, pull,
+                                            dtype=jnp.int32)
         label = jnp.minimum(st["label"], nbr_min)
-        # pointer jumping over transitive (dynamic) edges
+        # pointer jumping over transitive (dynamic) edges; labels are
+        # local ids — shift to packed rows when batched
+        off = ctx.vertex_offsets()
         for _ in range(_JUMPS_PER_ROUND):
-            label = label[label]
-        return {"label": label}
+            label = label[label + off]
+        return {**st, "label": label, FRONTIER_DIR_KEY: pull,
+                FRONTIER_OCC_KEY: occ}
 
     def converged(prev, cur):
         return jnp.all(prev["label"] == cur["label"])
@@ -52,4 +65,6 @@ def cc(max_iters: int = 512) -> VertexProgram:
     return VertexProgram(
         name="CC", init=init, step=step, converged=converged,
         extract=lambda st: st["label"], weighted=False, max_iters=max_iters,
+        frontier_init=lambda g: jnp.ones((g.n_nodes,), bool),
+        frontier_update=lambda st: jnp.ones_like(st["label"], bool),
     )

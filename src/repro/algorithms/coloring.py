@@ -3,13 +3,27 @@ control, *target* information (the pull form hoists the target's
 forbidden-color bookkeeping out of the inner loop).
 Round r: every uncolored vertex whose priority beats every uncolored
 neighbor takes color r.
+
+The uncolored set is a real, shrinking frontier: ``spred`` restricts
+contributing sources to exactly the uncolored mask, so the phase is
+``gatherable`` — dynamic configs start pull on the saturated frontier
+and hand the shrinking tail to sparse-gathered push iterations, with
+direction and occupancy recorded under the standard trace keys.
+
+``init``'s default key is derived per graph (``graph_key``) and
+``randomized=True`` tells ``run_batch`` to fold the batch index into
+per-graph keys — the old shared ``jax.random.key(1)`` default gave
+every batch member identical priorities, correlating their tie-breaks.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.vertex_program import MAX, EdgePhase, VertexProgram
+from repro.algorithms._random import graph_key
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       MAX, EdgePhase, VertexProgram,
+                                       dense_occupancy)
 
 __all__ = ["coloring"]
 
@@ -20,19 +34,28 @@ def coloring(max_iters: int = 512) -> VertexProgram:
         vprop=lambda st, src, w: st["priority"][src],
         spred=lambda st, src: st["color"][src] < 0,
         tpred=lambda st, dst: st["color"][dst] < 0,
+        frontier=lambda st: st["color"] < 0,
+        gatherable=True,  # spred == frontier membership
     )
 
     def init(graph, key=None):
-        key = key if key is not None else jax.random.key(1)
+        key = key if key is not None else graph_key(graph, salt=1)
         v = graph.n_nodes
         priority = jax.random.permutation(key, v).astype(jnp.float32)
-        return {"color": jnp.full((v,), -1, jnp.int32), "priority": priority}
+        return {"color": jnp.full((v,), -1, jnp.int32),
+                "priority": priority,
+                FRONTIER_DIR_KEY: jnp.asarray(False),
+                FRONTIER_OCC_KEY: dense_occupancy()}
 
     def step(ctx, st, it):
-        max_nbr = ctx.propagate(st, phase)  # -inf when no uncolored nbr
+        pull = ctx.choose_direction(phase.frontier(st),
+                                    st[FRONTIER_DIR_KEY])
+        max_nbr, occ = ctx.propagate_sparse(st, phase, pull)
+        # -inf when no uncolored neighbor
         win = (st["color"] < 0) & (st["priority"] > max_nbr)
         color = jnp.where(win, it, st["color"])
-        return {**st, "color": color}
+        return {**st, "color": color, FRONTIER_DIR_KEY: pull,
+                FRONTIER_OCC_KEY: occ}
 
     def converged(prev, cur):
         return jnp.all(cur["color"] >= 0)
@@ -40,4 +63,7 @@ def coloring(max_iters: int = 512) -> VertexProgram:
     return VertexProgram(
         name="CLR", init=init, step=step, converged=converged,
         extract=lambda st: st["color"], weighted=False, max_iters=max_iters,
+        frontier_init=lambda g: jnp.ones((g.n_nodes,), bool),
+        frontier_update=lambda st: st["color"] < 0,
+        randomized=True,
     )

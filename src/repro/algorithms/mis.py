@@ -2,13 +2,30 @@
 control, symmetric information.  Two edge phases per round: (a) min active
 neighbor priority, (b) broadcast of freshly selected vertices.
 Status: 0 = undecided, 1 = in MIS, 2 = removed.
+
+The undecided set is the frontier; ``phase_min``'s ``spred`` restricts
+sources to it, so the min-priority reduce is ``gatherable`` and the
+shrinking tail runs sparse under dynamic configs (one direction choice
+per round, recorded under the trace keys; the mark broadcast follows
+the same direction densely — its sources are the freshly selected
+vertices, a different mask, so it must not reuse the gather).
+
+``state_pad`` marks padding rows "removed" (2): convergence is
+``no vertex undecided``, and the packer's default zero fill would have
+left padding rows undecided — a batched MIS would never converge.
+``randomized=True`` + the per-graph default key fix the old shared
+``jax.random.key(0)`` fallback that correlated priorities across batch
+members.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.vertex_program import MAX, MIN, EdgePhase, VertexProgram
+from repro.algorithms._random import graph_key
+from repro.core.vertex_program import (FRONTIER_DIR_KEY, FRONTIER_OCC_KEY,
+                                       MAX, MIN, EdgePhase, VertexProgram,
+                                       dense_occupancy)
 
 __all__ = ["mis"]
 
@@ -19,29 +36,37 @@ def mis(max_iters: int = 256) -> VertexProgram:
         vprop=lambda st, src, w: st["priority"][src],
         spred=lambda st, src: st["status"][src] == 0,
         tpred=lambda st, dst: st["status"][dst] == 0,
+        frontier=lambda st: st["status"] == 0,
+        gatherable=True,  # spred == frontier membership
     )
     phase_mark = EdgePhase(
         monoid=MAX,
         vprop=lambda st, src, w: jnp.ones_like(src, jnp.float32),
         spred=lambda st, src: st["status"][src] == 1,
         tpred=lambda st, dst: st["status"][dst] == 0,
+        frontier=lambda st: st["status"] == 1,
     )
 
     def init(graph, key=None):
-        key = key if key is not None else jax.random.key(0)
+        key = key if key is not None else graph_key(graph, salt=0)
         v = graph.n_nodes
         # unique priorities -> deterministic, tie-free selection
         priority = jax.random.permutation(key, v).astype(jnp.float32)
-        return {"status": jnp.zeros((v,), jnp.int32), "priority": priority}
+        return {"status": jnp.zeros((v,), jnp.int32), "priority": priority,
+                FRONTIER_DIR_KEY: jnp.asarray(False),
+                FRONTIER_OCC_KEY: dense_occupancy()}
 
     def step(ctx, st, it):
-        min_nbr = ctx.propagate(st, phase_min)
+        pull = ctx.choose_direction(phase_min.frontier(st),
+                                    st[FRONTIER_DIR_KEY])
+        min_nbr, occ = ctx.propagate_sparse(st, phase_min, pull)
         select = (st["status"] == 0) & (st["priority"] < min_nbr)
         st1 = {**st, "status": jnp.where(select, 1, st["status"])}
-        marked = ctx.propagate(st1, phase_mark)
+        marked = ctx.propagate_dynamic(st1, phase_mark, pull)
         status = jnp.where((st1["status"] == 0) & (marked > 0), 2,
                            st1["status"])
-        return {**st1, "status": status}
+        return {**st1, "status": status, FRONTIER_DIR_KEY: pull,
+                FRONTIER_OCC_KEY: occ}
 
     def converged(prev, cur):
         return ~jnp.any(cur["status"] == 0)
@@ -50,4 +75,8 @@ def mis(max_iters: int = 256) -> VertexProgram:
         name="MIS", init=init, step=step, converged=converged,
         extract=lambda st: st["status"] == 1, weighted=False,
         max_iters=max_iters,
+        frontier_init=lambda g: jnp.ones((g.n_nodes,), bool),
+        frontier_update=lambda st: st["status"] == 0,
+        state_pad={"status": 2},
+        randomized=True,
     )

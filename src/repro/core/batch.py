@@ -56,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import weakref
+from functools import partial
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -186,13 +187,19 @@ class GraphBatch:
         return self.size * self.n_q
 
     # ------------------------------------------------------------------
-    def pack_state(self, states: Sequence[Any]):
+    def pack_state(self, states: Sequence[Any], pad: Optional[dict] = None):
         """Pack per-graph state pytrees into the block-diagonal layout.
 
         Per-graph ``[n_i, ...]`` vertex leaves become one
         ``[B*n_q, ...]`` leaf (padding rows zero-filled — inert, because
         padding vertices carry only self-loops and their segments are
         frozen from iteration 0); scalar leaves stack to ``[B]``.
+
+        ``pad`` (a program's :attr:`~repro.core.vertex_program.
+        VertexProgram.state_pad`) overrides the padding fill per state
+        key, for programs whose zero value is *live* rather than inert
+        — MIS pads ``status`` with 2 ("removed") because a padding row
+        of undecided zeros would block per-graph convergence forever.
         """
         if len(states) != self.size:
             raise ValueError(f"expected {self.size} states, "
@@ -200,7 +207,7 @@ class GraphBatch:
         states = [jax.tree.map(jnp.asarray, s) for s in states]
         ns = [int(n) for n in self.n_nodes_b]
 
-        def pack_leaf(*ls):
+        def pack_leaf(fill, *ls):
             if ls[0].ndim == 0:
                 return jnp.stack(ls)
             rows = []
@@ -210,15 +217,20 @@ class GraphBatch:
                         "state leaves must be per-vertex ([n, ...]) or "
                         f"scalar; got shape {leaf.shape} for a graph "
                         f"with {n} vertices")
-                pad = self.n_q - n
-                if pad:
+                p = self.n_q - n
+                if p:
                     leaf = jnp.concatenate(
-                        [leaf, jnp.zeros((pad,) + leaf.shape[1:],
-                                         leaf.dtype)])
+                        [leaf, jnp.full((p,) + leaf.shape[1:], fill,
+                                        leaf.dtype)])
                 rows.append(leaf)
             return jnp.concatenate(rows)
 
-        return jax.tree.map(pack_leaf, *states)
+        pad = pad or {}
+        if pad and isinstance(states[0], dict):
+            return {k: jax.tree.map(partial(pack_leaf, pad.get(k, 0)),
+                                    *(s[k] for s in states))
+                    for k in states[0]}
+        return jax.tree.map(partial(pack_leaf, 0), *states)
 
     def unpack_state(self, packed_state) -> List[Any]:
         """Slice the packed state back into per-graph pytrees
@@ -423,6 +435,67 @@ class BatchedEdgeContext:
         return choose_direction_batch(rows, self._out_deg_rows,
                                       self.n_edges_b, self.n_nodes_b,
                                       prev_pull, unvisited=urows)
+
+    def dynamic_direction(self, want_pull) -> jnp.ndarray:
+        """``[B]`` per-graph flags for an algorithm-chosen direction
+        (static configs: the config's constant direction, like the
+        sequential context)."""
+        prop = self.config.prop
+        if prop is not UpdateProp.PUSH_PULL:
+            return jnp.full((self.B,), prop is UpdateProp.PULL)
+        return jnp.broadcast_to(jnp.asarray(want_pull, bool), (self.B,))
+
+    # ------------------------------------------------------------------
+    # Per-graph state helpers (the batched overrides of the sequential
+    # trivia on EdgeContext): scalars become [B], reductions become
+    # row-wise over each graph's own n_q columns.  Padding rows receive
+    # their graph's broadcast value and padding columns contribute to
+    # row reductions — callers keep padding inert by construction
+    # (zero/state_pad fills and padding-false masks), exactly like the
+    # frontier statistics.
+
+    @property
+    def true_n_nodes(self) -> jnp.ndarray:
+        """``[B]`` true per-graph vertex counts (no padding rows)."""
+        return self.n_nodes_b
+
+    def per_vertex(self, x) -> jnp.ndarray:
+        """``[B]`` per-graph values -> ``[B*n_q]``, each graph's rows
+        (padding included) filled with that graph's value."""
+        x = jnp.asarray(x)
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (self.n_total,))
+        return jnp.repeat(x, self.n_q, total_repeat_length=self.n_total)
+
+    def align_per_graph(self, x) -> jnp.ndarray:
+        """Batched alignment must materialize: each packed row needs
+        its own graph's value (the sequential version is the identity;
+        see ``EdgeContext.align_per_graph``)."""
+        return self.per_vertex(x)
+
+    def per_graph_sum(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(x.reshape((self.B, self.n_q) + x.shape[1:]),
+                       axis=1)
+
+    def per_graph_any(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.any(x.reshape((self.B, self.n_q) + x.shape[1:]),
+                       axis=1)
+
+    def vertex_offsets(self) -> jnp.ndarray:
+        """``[B*n_q]`` packed row base (``i*n_q``) of each vertex's
+        graph — the shift that turns vertex-id-valued state (CC
+        labels) into packed row indices."""
+        return jnp.repeat(
+            jnp.arange(self.B, dtype=jnp.int32) * jnp.int32(self.n_q),
+            self.n_q, total_repeat_length=self.n_total)
+
+    def cond_per_graph(self, pred, true_fn, false_fn, state):
+        """Per-graph branch select: both branches execute on the packed
+        arrays (graphs may disagree — lax.cond needs one predicate) and
+        each graph's rows keep its own branch's result via the freeze
+        selector."""
+        return self.freeze(jnp.asarray(pred, bool),
+                           true_fn(state), false_fn(state))
 
     # ------------------------------------------------------------------
     def _frontier_edges_b(self, mask: jnp.ndarray) -> jnp.ndarray:

@@ -345,6 +345,89 @@ class EdgeContext:
         return choose_direction(frontier, self._out_degree, self.n_edges,
                                 self.n_nodes, prev_pull, unvisited=unvisited)
 
+    def dynamic_direction(self, want_pull) -> jnp.ndarray:
+        """An algorithm-chosen direction as this context's traced flag.
+
+        For programs whose per-iteration direction is *algorithmic*
+        rather than frontier-driven (CC's alternating hooking rounds):
+        under a static config the config's direction wins (a constant,
+        so only that branch compiles); under ``PUSH_PULL`` the wish is
+        honoured as a traced bool.  Always returns something safe to
+        record under :data:`FRONTIER_DIR_KEY` — the trace reports the
+        direction that actually executed.
+        """
+        prop = self.config.prop
+        if prop is not UpdateProp.PUSH_PULL:
+            return jnp.asarray(prop is UpdateProp.PULL)
+        return jnp.asarray(want_pull, bool)
+
+    # ------------------------------------------------------------------
+    # Per-graph state helpers.  Sequentially these are trivial; their
+    # :class:`~repro.core.batch.BatchedEdgeContext` overrides give the
+    # same program text per-graph semantics on packed [B*n_q] arrays —
+    # the contract that lets normalizing programs (PageRank's 1/V
+    # terms, BC's per-root level counter) run batched without baking
+    # packed totals into their arithmetic.
+
+    @property
+    def true_n_nodes(self):
+        """True vertex count(s): an int here, ``[B]`` when batched —
+        never counts the batch packer's inert padding vertices."""
+        return self.n_nodes
+
+    def per_vertex(self, x) -> jnp.ndarray:
+        """Broadcast a per-graph scalar (``[B]`` when batched) to a
+        per-vertex ``[V]`` array, each vertex receiving its own graph's
+        value."""
+        return jnp.broadcast_to(jnp.asarray(x), (self.n_nodes,))
+
+    def align_per_graph(self, x) -> jnp.ndarray:
+        """Align a per-graph scalar for elementwise use against
+        per-vertex arrays.  Sequentially this is the identity — the
+        scalar participates via normal broadcasting, keeping the step's
+        HLO in the scalar*vector shape whose rounding is stable across
+        the host and fused compilations (materializing a ``[V]``
+        operand invites fma contraction differences between the two
+        engines).  Batched it expands ``[B]`` to packed rows.  Use
+        ``per_vertex`` instead when the result itself must be a ``[V]``
+        array (e.g. to index with ``[src]``)."""
+        return jnp.asarray(x)
+
+    def per_graph_sum(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Sum a per-vertex array within each graph: scalar here,
+        ``[B]`` when batched."""
+        return jnp.sum(x)
+
+    def per_graph_any(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Any-reduce a per-vertex bool array within each graph: scalar
+        here, ``[B]`` when batched."""
+        return jnp.any(x)
+
+    def vertex_offsets(self) -> jnp.ndarray:
+        """Each vertex's graph base offset into the vertex id space.
+
+        Sequentially every vertex lives at its local id, so this is a
+        scalar 0; batched it is the ``[B*n_q]`` array of packed row
+        bases (``i*n_q`` for graph i's rows).  Programs that index
+        state by *vertex-id-valued state* (CC's pointer jumping,
+        ``label[label]``) must add it first — local label values only
+        address the right rows of a packed array after the shift.
+        """
+        return jnp.int32(0)
+
+    def cond_per_graph(self, pred, true_fn, false_fn, state):
+        """Per-graph two-way branch over full state pytrees.
+
+        Sequentially ``pred`` is a scalar and this is ``lax.cond``
+        (one branch executes).  Batched, graphs may disagree — BC's
+        forward/backward phases flip at per-graph times — so both
+        branches execute on the packed arrays and each graph's rows
+        select its own branch's result.  Both branches must return
+        pytrees of identical structure/shapes.
+        """
+        return jax.lax.cond(jnp.asarray(pred, bool).reshape(()),
+                            true_fn, false_fn, state)
+
     # ------------------------------------------------------------------
     def propagate(self, state, phase: EdgePhase,
                   direction: Optional[UpdateProp] = None,
@@ -774,14 +857,24 @@ def run_batch(program: VertexProgram, graphs, config: SystemConfig,
     ``seconds`` is its batch's wall time divided by the batch size.
 
     ``keys`` optionally supplies one PRNG key per graph for programs
-    with randomized init.  ``max_batch`` caps how many graphs pack into
-    one dispatch (a bucket with more graphs is split).  The remaining
-    knobs mean what they mean on :func:`run`; ``sparse_edge_capacity``
-    is applied per graph (0 disables the sparse path batch-wide).
+    with randomized init.  When omitted for a program that declares
+    ``randomized=True`` (coloring, MIS), per-graph keys are derived as
+    ``fold_in(key(0), batch_index)`` — every graph draws *independent*
+    priorities; the old shared-default-key behavior correlated
+    tie-breaks across supposedly independent batch members.  To
+    reproduce one graph's batched result sequentially, pass the same
+    ``fold_in(key(0), i)`` to :func:`run`.  ``max_batch`` caps how many
+    graphs pack into one dispatch (a bucket with more graphs is
+    split).  The remaining knobs mean what they mean on :func:`run`;
+    ``sparse_edge_capacity`` is applied per graph (0 disables the
+    sparse path batch-wide).
     """
     from repro.core.batch import (BatchedEdgeContext, bucket_key,
                                   get_graph_batch, run_fused_batch)
     graphs = list(graphs)
+    if keys is None and program.randomized:
+        base = jax.random.key(0)
+        keys = [jax.random.fold_in(base, i) for i in range(len(graphs))]
     if keys is not None and len(keys) != len(graphs):
         raise ValueError(f"{len(keys)} keys for {len(graphs)} graphs")
     if max_batch is not None and max_batch < 1:
@@ -803,7 +896,7 @@ def run_batch(program: VertexProgram, graphs, config: SystemConfig,
             states = [program.init(graphs[i]) if keys is None
                       else program.init(graphs[i], keys[i])
                       for i in part]
-            packed = batch.pack_state(states)
+            packed = batch.pack_state(states, pad=program.state_pad)
             for i, r in zip(part, run_fused_batch(program, batch, bctx,
                                                   packed, limit, warmup)):
                 results[i] = r

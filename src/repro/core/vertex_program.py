@@ -132,6 +132,16 @@ class VertexProgram:
     pass the result to ``ctx.propagate_dynamic``.  Frontier-less
     programs leave everything ``None`` and execute dynamic configs in
     the context's default direction.
+
+    Batching protocol (optional): ``state_pad`` maps state keys to the
+    fill value the batch packer must use for that leaf's padding rows
+    (default 0).  A program whose zero state is *not* inert — e.g. MIS,
+    where status 0 means "undecided" and an all-zero padding row would
+    never satisfy per-graph convergence — declares the inert value here
+    (``{"status": 2}``).  ``randomized`` marks a program whose ``init``
+    draws from a PRNG key; ``run_batch`` derives decorrelated per-graph
+    keys (``fold_in`` on the batch index) for such programs when the
+    caller passes no explicit keys.
     """
     name: str
     init: Callable[..., State]                     # (graph[, key]) -> state
@@ -142,6 +152,8 @@ class VertexProgram:
     max_iters: int = 1024
     frontier_init: Optional[Callable[..., jnp.ndarray]] = None  # (graph)
     frontier_update: Optional[Callable[[State], jnp.ndarray]] = None
+    state_pad: Optional[dict] = None               # key -> padding fill value
+    randomized: bool = False                       # init consumes a PRNG key
 
     @property
     def properties(self) -> AlgorithmicProperties:

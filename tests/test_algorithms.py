@@ -10,8 +10,9 @@ from repro.algorithms.reference import (bc_np, cc_np,
                                         sssp_np)
 from repro.core import STATIC_CONFIGS, SystemConfig, run
 
-# a representative spread of the design space (full grid in benchmarks)
-CONFIGS = ["TG0", "SG0", "SG1", "SGR", "SD1", "SDR"]
+# a representative spread of the design space (full grid in benchmarks);
+# since the ISSUE-6 port every app also runs the dynamic cells
+CONFIGS = ["TG0", "SG0", "SG1", "SGR", "SD1", "SDR", "DG1", "DD1"]
 
 
 class TestPageRank:
@@ -46,7 +47,7 @@ class TestSSSP:
 
 
 class TestMIS:
-    @pytest.mark.parametrize("cfg", ["TG0", "SGR", "SD1"])
+    @pytest.mark.parametrize("cfg", ["TG0", "SGR", "SD1", "DD1"])
     def test_is_maximal_independent(self, small_graph, cfg):
         r = run(mis(), small_graph, SystemConfig.from_name(cfg),
                 key=jax.random.key(5))
@@ -63,7 +64,7 @@ class TestMIS:
 
 
 class TestColoring:
-    @pytest.mark.parametrize("cfg", ["TG0", "SGR", "SD1"])
+    @pytest.mark.parametrize("cfg", ["TG0", "SGR", "SD1", "DD1"])
     def test_proper_coloring(self, small_graph, cfg):
         r = run(coloring(), small_graph, SystemConfig.from_name(cfg))
         color = np.asarray(r.extract(coloring()))
@@ -71,7 +72,7 @@ class TestColoring:
 
 
 class TestBC:
-    @pytest.mark.parametrize("cfg", ["TG0", "SGR", "SD1"])
+    @pytest.mark.parametrize("cfg", ["TG0", "SGR", "SD1", "DD1"])
     def test_matches_brandes(self, small_graph, cfg):
         r = run(bc(), small_graph, SystemConfig.from_name(cfg))
         got = np.asarray(r.extract(bc()))

@@ -50,6 +50,19 @@ def _autotune_artifact(speedup=1.3):
     }
 
 
+def _matrix_artifact(gain=1.4, source="synthetic"):
+    return {
+        "smoke": True,
+        "workload": {"scale": 256, "block_size": 64,
+                     "ref_config": "TG0",
+                     "configs": ["TG0", "SG1", "DD1"]},
+        "inputs": {g: {"source": source} for g in ("DCT", "RAJ")},
+        "cells": {f"{g}/{a}": {"specialization_gain": gain,
+                               "best": "DD1", "configs": {}}
+                  for g in ("DCT", "RAJ") for a in ("PR", "CC")},
+    }
+
+
 class TestExtractAndCompare:
     def test_extract_metric_names(self):
         m = extract_metrics("dispatch", _dispatch_artifact())
@@ -58,6 +71,9 @@ class TestExtractAndCompare:
         assert m["batch/DG1/B16/speedup"] == 2.0
         m = extract_metrics("autotune", _autotune_artifact())
         assert m["autotune/rmat/TD0/speedup"] == 1.3
+        m = extract_metrics("matrix", _matrix_artifact())
+        assert m["matrix/DCT/PR/specialization_gain"] == 1.4
+        assert m["matrix/RAJ/CC/specialization_gain"] == 1.4
         with pytest.raises(ValueError):
             extract_metrics("nope", {})
 
@@ -106,6 +122,20 @@ class TestExtractAndCompare:
         cur["smoke"] = False  # smoke vs full are different workloads
         assert compare_artifact("autotune", _autotune_artifact(),
                                 cur)["status"] == "incompatible"
+
+    def test_matrix_gain_regression_and_input_source_pinning(self):
+        base = _matrix_artifact(gain=1.4)
+        rep = compare_artifact("matrix", base,
+                               copy.deepcopy(base))
+        assert rep["status"] == "ok"
+        assert compare_artifact("matrix", base,
+                                _matrix_artifact(gain=1.0))["status"] \
+            == "regression"
+        # fetching the real graphs changes the workload identity: a
+        # baseline recorded on synthetic stand-ins must refuse to diff
+        assert compare_artifact("matrix", base,
+                                _matrix_artifact(source="real"))["status"] \
+            == "incompatible"
 
 
 class TestCompareDirs:

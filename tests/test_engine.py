@@ -109,11 +109,23 @@ class TestFusedVsHost:
 
     def test_frontierless_program_fused(self, rand_g):
         """Programs without the frontier protocol (no traces) run fused
-        too — the trace buffers simply stay out of the carry."""
-        from repro.algorithms import pagerank
-        host = run(pagerank(), rand_g, SystemConfig.from_name("SG1"),
+        too — the trace buffers simply stay out of the carry.  All six
+        registered apps now speak the protocol (ISSUE 6), so this path
+        is covered by an inline smoothing program."""
+        from repro.core.vertex_program import SUM, EdgePhase, VertexProgram
+        phase = EdgePhase(monoid=SUM,
+                          vprop=lambda st, src, w: st["x"][src])
+        prog = VertexProgram(
+            name="BFS",  # borrow a Table III row; properties are unused
+            init=lambda g: {"x": jnp.ones((g.n_nodes,), jnp.float32)},
+            step=lambda ctx, st, it: {
+                "x": 0.5 * st["x"] + 0.25 * ctx.propagate(st, phase)},
+            converged=lambda prev, cur: jnp.asarray(False),
+            extract=lambda st: st["x"],
+        )
+        host = run(prog, rand_g, SystemConfig.from_name("SG1"),
                    max_iters=5, engine="host")
-        fused = run(pagerank(), rand_g, SystemConfig.from_name("SG1"),
+        fused = run(prog, rand_g, SystemConfig.from_name("SG1"),
                     max_iters=5, engine="fused")
         assert fused.direction_trace is None
         assert fused.occupancy_trace is None

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.algorithms import bc, bfs, sssp
+from repro.algorithms import bc, bfs, pagerank, sssp
 from repro.algorithms.reference import bc_np, bfs_np, sssp_np
 from repro.core import ALL_CONFIGS, EdgeContext, SystemConfig, run
 from repro.core.frontier import (ALPHA, BETA, choose_direction,
@@ -154,10 +154,18 @@ class TestDirectionTrace:
         assert set(pull.direction_trace) == {"T"}
 
     def test_frontierless_program_has_no_trace(self, sf_g):
-        from repro.algorithms import pagerank
+        """All registered apps trace now (ISSUE 6) — a program that
+        opts out of the protocol still reports no trace."""
+        import dataclasses
+        prog = dataclasses.replace(pagerank(), frontier_init=None,
+                                   frontier_update=None)
+        r = run(prog, sf_g, SystemConfig.from_name("SG1"), max_iters=3)
+        assert r.direction_trace is None
+
+    def test_pagerank_traces_since_port(self, sf_g):
         r = run(pagerank(), sf_g, SystemConfig.from_name("SG1"),
                 max_iters=3)
-        assert r.direction_trace is None
+        assert set(r.direction_trace) == {"S"}
 
     def test_frontier_protocol_fields(self, sf_g):
         prog = bfs(source=7)
