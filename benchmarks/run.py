@@ -51,6 +51,14 @@ def main() -> None:
     ap.add_argument("--batch-smoke", action="store_true",
                     help="with --batch-only: tiny graphs, B<=4 (the CI "
                          "smoke job)")
+    ap.add_argument("--serve-only", action="store_true",
+                    help="only run the streaming-gateway load benchmark "
+                         "and write results/BENCH_serve.json (continuous "
+                         "batching vs serve-one-at-a-time throughput and "
+                         "latency under closed- and open-loop arrivals)")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="with --serve-only: tiny pool, 64 requests (the "
+                         "CI smoke job)")
     ap.add_argument("--matrix-only", action="store_true",
                     help="only run the 6-app x 6-input workload matrix "
                          "and write results/BENCH_matrix.json (per-cell "
@@ -77,6 +85,11 @@ def main() -> None:
     if args.batch_only:
         from benchmarks.batch import run_batch_bench
         run_batch_bench(smoke=args.batch_smoke)
+        return
+
+    if args.serve_only:
+        from benchmarks.serve import run_serve_bench
+        run_serve_bench(smoke=args.serve_smoke)
         return
 
     if args.json or args.dispatch_only:  # --dispatch-only implies --json

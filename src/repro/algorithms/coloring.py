@@ -53,7 +53,11 @@ def coloring(max_iters: int = 512) -> VertexProgram:
         max_nbr, occ = ctx.propagate_sparse(st, phase, pull)
         # -inf when no uncolored neighbor
         win = (st["color"] < 0) & (st["priority"] > max_nbr)
-        color = jnp.where(win, it, st["color"])
+        # per_vertex: `it` may be a per-graph [B] vector under the
+        # continuous-batching slice runner — each vertex colors with its
+        # own graph's round number (scalar broadcast sequentially)
+        color = jnp.where(win, ctx.per_vertex(jnp.asarray(it, jnp.int32)),
+                          st["color"])
         return {**st, "color": color, FRONTIER_DIR_KEY: pull,
                 FRONTIER_OCC_KEY: occ}
 

@@ -76,7 +76,8 @@ from repro.graph.structure import Graph
 from repro.kernels.segment_reduce import bin_edges_by_block
 
 __all__ = ["bucket_shape", "bucket_key", "pack_graphs", "get_graph_batch",
-           "GraphBatch", "BatchedEdgeContext", "run_fused_batch"]
+           "GraphBatch", "BatchedEdgeContext", "run_fused_batch",
+           "run_batch_slice"]
 
 #: Smallest padded vertex/edge bucket: tiny graphs quantize up to these
 #: so a bucket never degenerates to widths the [B, n_q] row views (and
@@ -246,6 +247,66 @@ class GraphBatch:
                 return a[i]
 
             outs.append(jax.tree.map(cut, packed_state))
+        return outs
+
+    # ------------------------------------------------------------------
+    def pack_state_host(self, states: Sequence[Any],
+                        pad: Optional[dict] = None):
+        """:meth:`pack_state` on host (numpy) arrays — same layout,
+        bit-identical values, no device dispatches.
+
+        The serving gateway repacks a bucket every scheduling slice;
+        doing the B-way concatenation with numpy keeps that per-slice
+        host work out of the device dispatch queue (the packed leaves
+        transfer once, at the jitted runner's call boundary).
+        """
+        if len(states) != self.size:
+            raise ValueError(f"expected {self.size} states, "
+                             f"got {len(states)}")
+        ns = [int(n) for n in self.n_nodes_b]
+
+        def pack_leaf(fill, *ls):
+            ls = [np.asarray(l) for l in ls]
+            if ls[0].ndim == 0:
+                return np.stack(ls)
+            rows = []
+            for leaf, n in zip(ls, ns):
+                if leaf.shape[0] != n:
+                    raise ValueError(
+                        "state leaves must be per-vertex ([n, ...]) or "
+                        f"scalar; got shape {leaf.shape} for a graph "
+                        f"with {n} vertices")
+                p = self.n_q - n
+                if p:
+                    leaf = np.concatenate(
+                        [leaf, np.full((p,) + leaf.shape[1:], fill,
+                                       leaf.dtype)])
+                rows.append(leaf)
+            return np.concatenate(rows)
+
+        pad = pad or {}
+        if pad and isinstance(states[0], dict):
+            return {k: jax.tree.map(partial(pack_leaf, pad.get(k, 0)),
+                                    *(s[k] for s in states))
+                    for k in states[0]}
+        return jax.tree.map(partial(pack_leaf, 0), *states)
+
+    def unpack_state_host(self, packed_state) -> List[Any]:
+        """:meth:`unpack_state` to host (numpy) pytrees: one device
+        sync per leaf, then per-graph numpy slices (copies, so the
+        packed buffers are not pinned by the returned views)."""
+        host = jax.tree.map(np.asarray, packed_state)
+        n_total = self.n_total
+        outs = []
+        for i in range(self.size):
+            n = int(self.n_nodes_b[i])
+
+            def cut(a, i=i, n=n):
+                if a.ndim and a.shape[0] == n_total:
+                    return a[i * self.n_q: i * self.n_q + n].copy()
+                return a[i]  # scalar indexing copies by construction
+
+            outs.append(jax.tree.map(cut, host))
         return outs
 
 
@@ -664,6 +725,13 @@ def run_fused_batch(program: VertexProgram, batch: GraphBatch,
     state, it_dev, it_b_dev, done_dev, db, ob = fn(state, dir_buf, occ_buf)
     jax.block_until_ready((state, it_dev, it_b_dev, done_dev, db, ob))
     dt = time.perf_counter() - t0
+    return _decode_batch_results(batch, state, it_b_dev, done_dev, db, ob,
+                                 traced, occ_traced, dt)
+
+
+def _decode_batch_results(batch: GraphBatch, state, it_b_dev, done_dev,
+                          db, ob, traced: bool, occ_traced: bool,
+                          dt: float) -> List[RunResult]:
     # the batch's single host sync is above; everything below is decoding
     it_b = np.asarray(it_b_dev)
     done_b = np.asarray(done_dev)
@@ -671,13 +739,136 @@ def run_fused_batch(program: VertexProgram, batch: GraphBatch,
     ob_np = np.asarray(ob) if occ_traced else None
     states = batch.unpack_state(state)
     results = []
-    for i in range(B):
+    for i in range(batch.size):
         k = int(it_b[i])
         trace = ("".join("T" if b else "S" for b in db_np[i, :k])
                  if traced else None)
         occs = ([float(o) for o in ob_np[i, :k]] if occ_traced else None)
         results.append(RunResult(
-            state=states[i], iterations=k, seconds=dt / B,
+            state=states[i], iterations=k, seconds=dt / batch.size,
             converged=bool(done_b[i]), direction_trace=trace,
             occupancy_trace=occs, engine="batched", dispatches=1))
     return results
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BatchSlice:
+    """One continuous-batching dispatch's outputs, decoded to host.
+
+    ``advanced[i]`` is how many iterations graph *i* executed inside
+    this slice; its per-iteration direction/occupancy columns are
+    ``dir_cols[i, :advanced[i]]`` / ``occ_cols[i, :advanced[i]]``
+    (``None`` when the program does not trace).  ``state`` stays a
+    packed device pytree so the next slice can consume it without a
+    host round-trip; ``converged_b`` reports per-graph convergence
+    (reaching ``limit_b`` does *not* set it — callers distinguish
+    "converged" from "out of budget" via ``it_b``).
+    """
+    state: Any
+    it_b: np.ndarray
+    converged_b: np.ndarray
+    advanced: np.ndarray
+    dir_cols: Optional[np.ndarray]
+    occ_cols: Optional[np.ndarray]
+    seconds: float
+
+
+def run_batch_slice(program: VertexProgram, batch: GraphBatch,
+                    bctx: BatchedEdgeContext, state,
+                    it_b, done_b, limit_b, slice_len: int,
+                    warmup: bool = True) -> BatchSlice:
+    """Advance the packed batch by **up to** ``slice_len`` iterations.
+
+    The continuous-batching engine under the serving gateway: unlike
+    :func:`run_fused_batch` (every graph starts at iteration 0 and the
+    loop runs to whole-batch convergence), this dispatch resumes each
+    graph from its own carried ``it_b[i]`` and stops early at the slice
+    boundary, where the scheduler can retire converged graphs and join
+    newly admitted ones before the next dispatch.
+
+    Per-graph semantics are exact across slicing and batch-composition
+    churn:
+
+    - ``program.step`` receives the **per-graph** iteration counters
+      (``[B]`` int32) instead of a batch-level scalar — a graph that
+      joined mid-stream sees its own 0, 1, 2, ... exactly as its
+      sequential run would (CC's alternating hooking direction and
+      CLR's round-numbered colors depend on this).
+    - a graph stops advancing once it converges *or* reaches its own
+      ``limit_b[i]`` (per-request ``max_iters``); its rows freeze, so
+      cohabitating graphs see nothing.
+    - ``done_b`` marks slots the scheduler parked (free slots between
+      requests): their rows are frozen from the first iteration and
+      their trace columns never read.
+
+    One timed jitted dispatch per call; the compiled runner is cached
+    per (program, packed graph, slice_len, capacities), so steady-state
+    serving traffic over a stable bucket roster re-enters a compiled
+    executable every slice.
+    """
+    B = bctx.B
+    traced, occ_traced = _trace_flags(program, state)
+    dir_buf = jnp.zeros((B, slice_len), bool) if traced else None
+    occ_buf = (jnp.full((B, slice_len), dense_occupancy())
+               if occ_traced else None)
+    it_b = jnp.asarray(np.asarray(it_b, np.int32))
+    done_b0 = jnp.asarray(np.asarray(done_b, bool))
+    limit_b = jnp.asarray(np.asarray(limit_b, np.int32))
+
+    def sliced(st, it_b, parked_b, limit_b, db, ob):
+        def stopped(conv_b, it_b):
+            return parked_b | conv_b | (it_b >= limit_b)
+
+        def cond(carry):
+            _, s, it_b, conv_b, _, _ = carry
+            return (s < slice_len) & ~jnp.all(stopped(conv_b, it_b))
+
+        def body(carry):
+            st, s, it_b, conv_b, db, ob = carry
+            frozen = stopped(conv_b, it_b)
+            new = program.step(bctx, st, it_b)
+            conv = bctx.converged_per_graph(program, st, new)
+            merged = bctx.freeze(frozen, st, new)
+            it_b = it_b + jnp.where(frozen, 0, 1).astype(jnp.int32)
+            conv_b = conv_b | (conv & ~frozen)
+            if traced:
+                col = jnp.asarray(merged[FRONTIER_DIR_KEY], bool)
+                db = jax.lax.dynamic_update_slice(db, col[:, None], (0, s))
+            if occ_traced:
+                col = jnp.asarray(merged[FRONTIER_OCC_KEY], jnp.float32)
+                ob = jax.lax.dynamic_update_slice(ob, col[:, None], (0, s))
+            return (merged, s + jnp.int32(1), it_b, conv_b, db, ob)
+
+        return jax.lax.while_loop(
+            cond, body,
+            (st, jnp.int32(0), it_b, jnp.zeros((B,), bool), db, ob))
+
+    def build():
+        fn = jax.jit(sliced, donate_argnums=(0, 4, 5))
+        if warmup:
+            fn = fn.lower(state, it_b, done_b0, limit_b,
+                          dir_buf, occ_buf).compile()
+        return program, fn
+
+    fn = _cached_exec_fn(
+        program, bctx.inner,
+        ("batched_slice", B, bctx.n_q, bctx.m_q, slice_len, traced,
+         occ_traced, bctx.cap_key), build)
+    t0 = time.perf_counter()
+    STATS.dispatches += 1
+    out_state, _, it_out, conv_out, db, ob = fn(
+        state, it_b, done_b0, limit_b, dir_buf, occ_buf)
+    jax.block_until_ready((out_state, it_out, conv_out, db, ob))
+    dt = time.perf_counter() - t0
+    it_in = np.asarray(it_b)
+    it_np = np.asarray(it_out)
+    return BatchSlice(
+        state=out_state,
+        it_b=it_np,
+        converged_b=np.asarray(conv_out),
+        advanced=it_np - it_in,
+        dir_cols=np.asarray(db) if traced else None,
+        occ_cols=np.asarray(ob) if occ_traced else None,
+        seconds=dt,
+    )

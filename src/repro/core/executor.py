@@ -620,6 +620,11 @@ class RunResult:
     #: timed jitted invocations this run issued: 1 for the fused engine,
     #: ``iterations`` for the host engine (warmup compiles excluded).
     dispatches: int = 0
+    #: True when a serving-gateway per-request deadline expired before
+    #: convergence: ``state`` then holds the partial-iteration state
+    #: after the last completed scheduling slice (and ``converged`` is
+    #: False).  Always False for direct ``run()``/``run_batch`` runs.
+    timed_out: bool = False
 
     @property
     def sparse_iterations(self) -> Optional[int]:

@@ -170,6 +170,13 @@ class PlanCache:
             return {"entries": len(self._store), "hits": self.hits,
                     "misses": self.misses, "by_kind": by_kind}
 
+    def kind_stats(self, kind: str) -> Dict[str, int]:
+        """One kind's ``{hits, misses, entries}`` (zeros when the kind
+        has never been touched) — the shape serving/property tests
+        assert plan-cache warmth with."""
+        return self.stats()["by_kind"].get(
+            kind, {"hits": 0, "misses": 0, "entries": 0})
+
     def __len__(self) -> int:
         with self._lock:
             self._prune()

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.kernels.segment_reduce.ops import bin_edges_by_block
 
-__all__ = ["Graph", "graph_stats", "GraphStats"]
+__all__ = ["Graph", "graph_stats", "GraphStats", "validate_graph"]
 
 
 @jax.tree_util.register_dataclass
@@ -161,6 +161,63 @@ class GraphStats:
     @cached_property
     def as_dict(self):
         return dataclasses.asdict(self)
+
+
+def validate_graph(g: Graph) -> list:
+    """Structural-soundness check for externally supplied graphs.
+
+    Returns a list of human-readable defect descriptions (empty when
+    the graph is well-formed).  The serving gateway runs this at
+    admission so a malformed query — negative row offsets, a dangling
+    edge endpoint, NaN/inf weights, inconsistent array lengths — is
+    rejected with a structured error *before* it can join (and poison)
+    an in-flight packed batch.  Pure host-side numpy; never dispatches.
+    """
+    errors: list = []
+    n, m = int(g.n_nodes), int(g.n_edges)
+    if n < 0 or m < 0:
+        return [f"negative graph size (n={n}, m={m})"]
+
+    def arr(name):
+        try:
+            return np.asarray(getattr(g, name))
+        except Exception as e:  # device array in a broken state, etc.
+            errors.append(f"{name}: not convertible to a host array ({e})")
+            return None
+
+    sides = [("row_ptr_out", "src", "dst", "weight", "out_degree"),
+             ("row_ptr_in", "src_in", "dst_in", "weight_in", "in_degree")]
+    for rp_name, s_name, d_name, w_name, deg_name in sides:
+        rp, s, d, w, deg = (arr(rp_name), arr(s_name), arr(d_name),
+                            arr(w_name), arr(deg_name))
+        if any(a is None for a in (rp, s, d, w, deg)):
+            continue
+        for name, a, want in ((rp_name, rp, n + 1), (s_name, s, m),
+                              (d_name, d, m), (w_name, w, m),
+                              (deg_name, deg, n)):
+            if a.shape[:1] != (want,):
+                errors.append(f"{name}: length {a.shape[0] if a.ndim else 0}"
+                              f" != expected {want}")
+        if rp.shape[:1] != (n + 1,) or s.shape[:1] != (m,):
+            continue  # length errors above make index checks misleading
+        if rp.size and int(rp[0]) != 0:
+            errors.append(f"{rp_name}[0] = {int(rp[0])} != 0")
+        if np.any(np.diff(rp) < 0) or np.any(rp < 0):
+            errors.append(f"{rp_name}: offsets not non-negative "
+                          "monotone non-decreasing")
+        elif rp.size and int(rp[-1]) != m:
+            errors.append(f"{rp_name}[-1] = {int(rp[-1])} != n_edges {m}")
+        for name, ids in ((s_name, s), (d_name, d)):
+            if ids.size and (ids.min() < 0 or ids.max() >= n):
+                errors.append(f"{name}: endpoint ids outside [0, {n}) "
+                              "(dangling edge)")
+        if not np.all(np.isfinite(w)):
+            errors.append(f"{w_name}: non-finite weights (NaN/inf)")
+        if (rp.shape[:1] == (n + 1,) and deg.shape[:1] == (n,)
+                and not np.any(np.diff(rp) < 0)
+                and not np.array_equal(np.diff(rp), deg)):
+            errors.append(f"{deg_name} inconsistent with {rp_name} diffs")
+    return errors
 
 
 def graph_stats(g: Graph) -> GraphStats:

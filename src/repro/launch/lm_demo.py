@@ -1,0 +1,76 @@
+"""LM serving demo: prefill + batched KV-cache decode for an LM arch
+(reduced config on CPU; the production shapes are proven by the dry-run).
+
+    PYTHONPATH=src python -m repro.launch.lm_demo --arch starcoder2-7b \
+        --batch 4 --prompt-len 32 --gen 16
+
+Relocated from ``repro.launch.serve``, which now hosts the streaming
+graph-serving gateway; ``python -m repro.launch.serve --arch ...`` still
+forwards here with a deprecation warning.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_NAMES, get_arch
+from repro.data.synthetic import lm_batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-7b",
+                    choices=[a for a in ARCH_NAMES
+                             if "moe" in a or "command" in a
+                             or "starcoder" in a or "grok" in a])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    cfg = arch.reduced_cfg
+    if arch.family == "moe":
+        from repro.models.moe import init_moe_lm as init
+        from repro.models.moe import moe_decode_step as decode_step
+        from repro.models.moe import moe_prefill as prefill
+    else:
+        from repro.models.transformer import (decode_step, init_lm as init,
+                                              prefill)
+    params = init(jax.random.key(0), cfg)
+
+    b, s = args.batch, args.prompt_len
+    prompt = jnp.asarray(lm_batch(0, b, s, cfg.vocab)["tokens"])
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(lambda p, t: prefill(cfg, p, t))(params, prompt)
+    jax.block_until_ready(logits)
+    print(f"prefill[{b}x{s}]: {(time.perf_counter()-t0)*1e3:.0f} ms "
+          f"(incl. compile)")
+
+    smax = s + args.gen
+    kc = jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, smax, cfg.d_head),
+                   jnp.bfloat16).at[:, :, :, :s].set(
+        cache[0].astype(jnp.bfloat16))
+    vc = jnp.zeros_like(kc).at[:, :, :, :s].set(
+        cache[1].astype(jnp.bfloat16))
+    decode = jax.jit(lambda p, t, c, n: decode_step(cfg, p, t, c, n))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    outs = [np.asarray(tok[:, 0])]
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        lg, (kc, vc) = decode(params, tok, (kc, vc), jnp.int32(s + i))
+        tok = jnp.argmax(lg[:, 0], -1)[:, None].astype(jnp.int32)
+        outs.append(np.asarray(tok[:, 0]))
+    jax.block_until_ready(tok)
+    dt = (time.perf_counter() - t0) / args.gen
+    print(f"decode: {dt*1e3:.1f} ms/token/batch "
+          f"({args.gen} steps, batch {b})")
+    print("sample token ids:", np.stack(outs, 1)[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

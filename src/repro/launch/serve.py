@@ -1,71 +1,651 @@
-"""Serving launcher: prefill + batched KV-cache decode for an LM arch
-(reduced config on CPU; the production shapes are proven by the dry-run).
+"""Streaming graph-serving gateway with continuous batching.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
-        --batch 4 --prompt-len 32 --gen 16
+The paper's result — no single (coherence, consistency, push/pull)
+configuration wins across workloads — implies a serving front-end that
+admits a live stream of heterogeneous ``(program, graph, config)``
+queries and dispatches each on its best-fit packed batch.  This module
+is that front-end, built vllm-style on iteration-level scheduling:
+
+- **Admission.**  :meth:`GraphGateway.submit` validates the graph
+  (:func:`repro.graph.structure.validate_graph` — malformed queries are
+  rejected with a structured :class:`AdmissionError` before they can
+  poison an in-flight batch), applies bounded-queue backpressure
+  (:class:`GatewayBackpressure` once ``max_queue`` requests wait), and
+  enqueues a :class:`Ticket` on the request's **lane** — the
+  (program, config, knobs, :func:`~repro.core.batch.bucket_key`) class
+  whose members are structurally compatible to pack together.
+
+- **Continuous batching.**  Each lane keeps a *roster* of up to
+  ``max_batch`` packed slots.  Every scheduling round admits waiting
+  tickets into free slots and advances the whole roster by one fused
+  ``slice_len``-iteration dispatch (:func:`~repro.core.batch.
+  run_batch_slice`); converged requests retire at the slice boundary
+  and newly arrived graphs join the next dispatch — the device stays
+  saturated without waiting for stragglers.  Because each request
+  carries its **own** iteration counter and freeze mask inside the
+  packed batch, results are bit-identical to a sequential
+  :func:`~repro.core.executor.run` no matter which cohort a request
+  shared its dispatches with (inexact float-SUM programs like PR match
+  ``run_batch`` bitwise and sequential ``run`` to float tolerance).
+
+- **Plan-cache warmth.**  Rosters re-enter :data:`~repro.core.
+  plan_cache.PLAN_CACHE` wholesale: an unchanged roster reuses its
+  packed batch (``batch_pack``), bound context (``batch_context``) and
+  compiled slice runner (``exec_fn``) outright, so the steady-state
+  per-slice cost is one cached jitted call plus numpy repacking.
+
+Quickstart (the README's 3-line session)::
+
+    with GraphGateway() as gw:
+        t = gw.submit(bfs(), graph, SystemConfig.from_name("DG1"))
+        result = t.result()          # RunResult, bit-identical to run()
+
+``python -m repro.launch.serve`` runs a self-contained demo; the LM
+prefill/decode demo that used to live here moved to
+``repro.launch.lm_demo`` (``--arch`` still forwards there).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import itertools
+import sys
+import threading
 import time
+import warnings
+from collections import deque
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import ARCH_NAMES, get_arch
-from repro.data.synthetic import lm_batch
+from repro.core.batch import (BatchedEdgeContext, bucket_key,
+                              get_graph_batch, run_batch_slice)
+from repro.core.config_space import SystemConfig
+from repro.core.executor import RunResult, _normalize_autotune
+from repro.core.plan_cache import PLAN_CACHE
+from repro.core.vertex_program import VertexProgram
+from repro.graph.structure import Graph, validate_graph
+
+__all__ = ["GraphGateway", "ContinuousScheduler", "Ticket", "GatewayStats",
+           "AdmissionError", "GatewayBackpressure", "CancelledError",
+           "main"]
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="starcoder2-7b",
-                    choices=[a for a in ARCH_NAMES
-                             if "moe" in a or "command" in a
-                             or "starcoder" in a or "grok" in a])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
+class AdmissionError(ValueError):
+    """A request rejected at admission, before touching any batch.
 
-    arch = get_arch(args.arch)
-    cfg = arch.reduced_cfg
-    if arch.family == "moe":
-        from repro.models.moe import init_moe_lm as init
-        from repro.models.moe import moe_decode_step as decode_step
-        from repro.models.moe import moe_prefill as prefill
-    else:
-        from repro.models.transformer import (decode_step, init_lm as init,
-                                              prefill)
-    params = init(jax.random.key(0), cfg)
+    ``code`` is a stable machine-readable class (``"invalid_graph"``),
+    ``errors`` the list of human-readable structural defects
+    :func:`~repro.graph.structure.validate_graph` found.
+    """
 
-    b, s = args.batch, args.prompt_len
-    prompt = jnp.asarray(lm_batch(0, b, s, cfg.vocab)["tokens"])
-    t0 = time.perf_counter()
-    logits, cache = jax.jit(lambda p, t: prefill(cfg, p, t))(params, prompt)
-    jax.block_until_ready(logits)
-    print(f"prefill[{b}x{s}]: {(time.perf_counter()-t0)*1e3:.0f} ms "
-          f"(incl. compile)")
+    def __init__(self, code: str, errors: List[str]):
+        super().__init__(f"{code}: " + "; ".join(errors))
+        self.code = code
+        self.errors = list(errors)
 
-    smax = s + args.gen
-    kc = jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, smax, cfg.d_head),
-                   jnp.bfloat16).at[:, :, :, :s].set(
-        cache[0].astype(jnp.bfloat16))
-    vc = jnp.zeros_like(kc).at[:, :, :, :s].set(
-        cache[1].astype(jnp.bfloat16))
-    decode = jax.jit(lambda p, t, c, n: decode_step(cfg, p, t, c, n))
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    outs = [np.asarray(tok[:, 0])]
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        lg, (kc, vc) = decode(params, tok, (kc, vc), jnp.int32(s + i))
-        tok = jnp.argmax(lg[:, 0], -1)[:, None].astype(jnp.int32)
-        outs.append(np.asarray(tok[:, 0]))
-    jax.block_until_ready(tok)
-    dt = (time.perf_counter() - t0) / args.gen
-    print(f"decode: {dt*1e3:.1f} ms/token/batch "
-          f"({args.gen} steps, batch {b})")
-    print("sample token ids:", np.stack(outs, 1)[0][:12].tolist())
+
+class GatewayBackpressure(RuntimeError):
+    """Raised by ``submit`` when ``max_queue`` requests already wait —
+    the bounded-queue signal that arrival rate exceeds service rate.
+    Callers are expected to retry with backoff (or shed load)."""
+
+
+class CancelledError(RuntimeError):
+    """Raised by :meth:`Ticket.result` for a cancelled request."""
+
+
+# ---------------------------------------------------------------------------
+class Ticket:
+    """One in-flight request: a future plus its lifecycle timestamps.
+
+    Timestamps (``enqueued_at`` → ``admitted_at`` → ``first_dispatch_at``
+    → ``completed_at``, on the gateway's clock) expose where a request
+    spent its latency: queued behind backpressure, waiting for a roster
+    slot, or actually iterating.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self, program: VertexProgram, graph: Graph,
+                 config: SystemConfig, key, max_iters: Optional[int],
+                 deadline_s: Optional[float]):
+        self.id = next(self._ids)
+        self.program = program
+        self.graph = graph
+        self.config = config
+        self.key = key
+        self.max_iters = max_iters
+        self.deadline_s = deadline_s
+        self.enqueued_at: Optional[float] = None
+        self.admitted_at: Optional[float] = None
+        self.first_dispatch_at: Optional[float] = None
+        self.completed_at: Optional[float] = None
+        self.cancelled = False
+        self._event = threading.Event()
+        self._result: Optional[RunResult] = None
+        self._error: Optional[BaseException] = None
+        self._on_cancel = None
+        self._dispatches = 0
+        self._trace: List[str] = []
+        self._occs: List[float] = []
+        self._traced = False
+        self._occ_traced = False
+
+    def cancel(self) -> None:
+        """Request cancellation: honoured at the next slice boundary
+        (mid-flight) or the next admission round (still queued)."""
+        self.cancelled = True
+        if self._on_cancel is not None:
+            self._on_cancel()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> RunResult:
+        """The request's :class:`RunResult` (blocks up to ``timeout``).
+
+        Raises :class:`CancelledError` for cancelled requests and
+        ``TimeoutError`` when the result is not ready in time (with a
+        pure :class:`ContinuousScheduler`, drive ``poll()`` first —
+        nothing advances between polls).
+        """
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.id} not finished")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _finish(self, result: Optional[RunResult],
+                error: Optional[BaseException], now: float) -> None:
+        self.completed_at = now
+        self._result, self._error = result, error
+        self._event.set()
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class GatewayStats:
+    """Aggregated request-lifecycle instrumentation.
+
+    Counters cover every terminal outcome (completed = converged +
+    iteration-limited + timed-out); the latency/occupancy samples feed
+    :meth:`snapshot`'s p50/p99 and throughput summary — the metrics
+    schema documented in docs/ARCHITECTURE.md and exported by
+    ``benchmarks/serve.py``.
+    """
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    converged: int = 0
+    timed_out: int = 0
+    cancelled: int = 0
+    rejected: int = 0
+    backpressure_rejections: int = 0
+    slices: int = 0
+    roster_rebuilds: int = 0
+    dispatch_seconds: float = 0.0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    queue_delays_s: List[float] = dataclasses.field(default_factory=list)
+    occupancy: List[float] = dataclasses.field(default_factory=list)
+    requests: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    first_enqueue_at: Optional[float] = None
+    last_complete_at: Optional[float] = None
+
+    def record_submit(self, t: Ticket) -> None:
+        self.submitted += 1
+        if self.first_enqueue_at is None:
+            self.first_enqueue_at = t.enqueued_at
+
+    def record_slice(self, active: int, roster: int, seconds: float) -> None:
+        self.slices += 1
+        self.dispatch_seconds += seconds
+        self.occupancy.append(active / max(1, roster))
+
+    def record_done(self, t: Ticket, outcome: str) -> None:
+        self.completed += 1 if outcome != "cancelled" else 0
+        if outcome == "converged":
+            self.converged += 1
+        elif outcome == "timed_out":
+            self.timed_out += 1
+        elif outcome == "cancelled":
+            self.cancelled += 1
+        self.last_complete_at = t.completed_at
+        if outcome != "cancelled":
+            self.latencies_s.append(t.completed_at - t.enqueued_at)
+        if t.admitted_at is not None:
+            self.queue_delays_s.append(t.admitted_at - t.enqueued_at)
+        self.requests.append({
+            "id": t.id, "outcome": outcome,
+            "enqueued_at": t.enqueued_at, "admitted_at": t.admitted_at,
+            "first_dispatch_at": t.first_dispatch_at,
+            "completed_at": t.completed_at,
+            "dispatches": t._dispatches,
+        })
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> Optional[float]:
+        return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+    def snapshot(self) -> Dict[str, Any]:
+        """One JSON-able summary dict (the serving metrics schema)."""
+        lat = self.latencies_s
+        window = ((self.last_complete_at - self.first_enqueue_at)
+                  if lat and self.last_complete_at is not None
+                  and self.first_enqueue_at is not None else None)
+        ms = lambda s: None if s is None else s * 1e3
+        return {
+            "submitted": self.submitted, "admitted": self.admitted,
+            "completed": self.completed, "converged": self.converged,
+            "timed_out": self.timed_out, "cancelled": self.cancelled,
+            "rejected": self.rejected,
+            "backpressure_rejections": self.backpressure_rejections,
+            "slices": self.slices,
+            "roster_rebuilds": self.roster_rebuilds,
+            "dispatch_seconds": self.dispatch_seconds,
+            "latency_p50_ms": ms(self._pct(lat, 50)),
+            "latency_p99_ms": ms(self._pct(lat, 99)),
+            "queue_delay_p50_ms": ms(self._pct(self.queue_delays_s, 50)),
+            "mean_occupancy": (float(np.mean(self.occupancy))
+                               if self.occupancy else None),
+            "throughput_rps": (self.completed / window
+                               if window else None),
+        }
+
+
+# ---------------------------------------------------------------------------
+class _Lane:
+    """One (program, config, knobs, bucket) service class.
+
+    ``roster`` is the ordered tuple of graphs the packed batch is built
+    from; a slot whose ticket retired stays in the roster as a parked
+    placeholder (its rows frozen by the slice runner's done mask) so
+    the compiled runner's shape — and the whole
+    batch/context/executable plan-cache chain — survives request
+    churn.  Only *membership* changes (a new graph claiming a slot, or
+    roster growth toward ``max_batch``) rebuild the batch; re-admitting
+    a graph already parked in the roster is entirely cache-warm.
+    """
+
+    def __init__(self, program: VertexProgram, config: SystemConfig,
+                 use_pallas: bool, cap: Optional[int], autotune):
+        self.program = program
+        self.config = config
+        self.use_pallas = use_pallas
+        self.cap = cap
+        self.autotune = autotune
+        self.queue: deque = deque()
+        self.roster: List[Graph] = []
+        self.tickets: List[Optional[Ticket]] = []
+        self.states: List[Any] = []
+        self.it_b: List[int] = []
+        self.limit_b: List[int] = []
+        self.batch = None
+        self.bctx = None
+
+    # -- admission ------------------------------------------------------
+    def _claim_slot(self, graph: Graph, max_batch: int) -> Optional[int]:
+        free = [i for i, t in enumerate(self.tickets) if t is None]
+        for i in free:  # cache-warm: same graph already in the roster
+            if self.roster[i] is graph:
+                return i
+        if free:
+            self.roster[free[0]] = graph
+            return free[0]
+        if len(self.roster) < max_batch:
+            self.roster.append(graph)
+            self.tickets.append(None)
+            self.states.append(None)
+            self.it_b.append(0)
+            self.limit_b.append(0)
+            return len(self.roster) - 1
+        return None
+
+    def admit(self, max_batch: int, clock, stats: GatewayStats) -> bool:
+        """Drain waiting tickets into free roster slots; returns True
+        when at least one ticket was admitted this round."""
+        before = tuple(id(g) for g in self.roster)
+        admitted = False
+        while self.queue:
+            t = self.queue[0]
+            if t.cancelled:
+                self.queue.popleft()
+                t._finish(None, CancelledError(f"request {t.id} cancelled "
+                                               "while queued"), clock())
+                stats.record_done(t, "cancelled")
+                continue
+            slot = self._claim_slot(t.graph, max_batch)
+            if slot is None:
+                break
+            self.queue.popleft()
+            self.tickets[slot] = t
+            if t.key is None:
+                # default-key init is deterministic per graph (randomized
+                # apps derive their key from graph_key), so repeat traffic
+                # over a graph reuses its host init state — kind
+                # "init_state", evicted with the graph like every other
+                # per-graph plan.  Safe to share: packing only reads it
+                # and the first slice replaces the slot with fresh copies.
+                st = PLAN_CACHE.get(
+                    t.graph, "init_state", (id(self.program),),
+                    lambda: jax.tree.map(np.asarray,
+                                         self.program.init(t.graph)))
+            else:
+                st = jax.tree.map(np.asarray,
+                                  self.program.init(t.graph, t.key))
+            self.states[slot] = st
+            self.it_b[slot] = 0
+            self.limit_b[slot] = int(t.max_iters
+                                     if t.max_iters is not None
+                                     else self.program.max_iters)
+            t.admitted_at = clock()
+            stats.admitted += 1
+            admitted = True
+        if tuple(id(g) for g in self.roster) != before:
+            self.batch = get_graph_batch(tuple(self.roster))
+            self.bctx = BatchedEdgeContext.create(
+                self.batch, self.config, use_pallas=self.use_pallas,
+                sparse_edge_capacity=self.cap, autotune=self.autotune)
+            stats.roster_rebuilds += 1
+        return admitted
+
+    # -- execution ------------------------------------------------------
+    def dispatch(self, slice_len: int, clock, stats: GatewayStats) -> bool:
+        """One fused slice over the roster; retires finished requests
+        at the slice boundary.  Returns True when work was done."""
+        active = [i for i, t in enumerate(self.tickets) if t is not None]
+        if not active:
+            return False
+        now = clock()
+        for i in active:
+            if self.tickets[i].first_dispatch_at is None:
+                self.tickets[i].first_dispatch_at = now
+        parked = np.asarray([t is None for t in self.tickets])
+        packed = self.batch.pack_state_host(self.states,
+                                            pad=self.program.state_pad)
+        packed = jax.tree.map(jnp.asarray, packed)
+        sl = run_batch_slice(
+            self.program, self.batch, self.bctx, packed,
+            np.asarray(self.it_b, np.int32), parked,
+            np.asarray(self.limit_b, np.int32), slice_len)
+        self.states = self.batch.unpack_state_host(sl.state)
+        stats.record_slice(len(active), len(self.roster), sl.seconds)
+        now = clock()
+        for i in active:
+            t = self.tickets[i]
+            adv = int(sl.advanced[i])
+            self.it_b[i] = int(sl.it_b[i])
+            t._dispatches += 1
+            if sl.dir_cols is not None:
+                t._traced = True
+                t._trace.extend("T" if b else "S"
+                                for b in sl.dir_cols[i, :adv])
+            if sl.occ_cols is not None:
+                t._occ_traced = True
+                t._occs.extend(float(o) for o in sl.occ_cols[i, :adv])
+            if t.cancelled:
+                self._retire(i, now, "cancelled", stats)
+            elif bool(sl.converged_b[i]):
+                self._retire(i, now, "converged", stats)
+            elif self.it_b[i] >= self.limit_b[i]:
+                self._retire(i, now, "iteration_limit", stats)
+            elif (t.deadline_s is not None
+                  and now >= t.enqueued_at + t.deadline_s):
+                # deadlines fire only at slice boundaries: the request
+                # keeps the partial state of its last completed slice
+                self._retire(i, now, "timed_out", stats)
+        return True
+
+    def _retire(self, i: int, now: float, outcome: str,
+                stats: GatewayStats) -> None:
+        t = self.tickets[i]
+        self.tickets[i] = None
+        if outcome == "cancelled":
+            t._finish(None, CancelledError(
+                f"request {t.id} cancelled mid-flight"), now)
+        else:
+            t._finish(RunResult(
+                state=self.states[i],
+                iterations=self.it_b[i],
+                seconds=now - t.enqueued_at,
+                converged=(outcome == "converged"),
+                direction_trace="".join(t._trace) if t._traced else None,
+                occupancy_trace=t._occs if t._occ_traced else None,
+                engine="gateway", dispatches=t._dispatches,
+                timed_out=(outcome == "timed_out")), None, now)
+        stats.record_done(t, outcome)
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(t is not None for t in self.tickets)
+
+
+# ---------------------------------------------------------------------------
+class ContinuousScheduler:
+    """The gateway's deterministic core: no threads, no wall-clock
+    dependence beyond the injectable ``clock``.
+
+    ``submit`` validates + enqueues; each ``poll()`` is one scheduling
+    round — admit waiting requests into every lane, then advance every
+    lane with active work by one fused slice.  The fault-injection and
+    property tests drive this class directly so arbitrary
+    arrival/retirement interleavings are replayable; production traffic
+    goes through :class:`GraphGateway`, which runs the same scheduler
+    under a worker thread.
+    """
+
+    def __init__(self, max_batch: int = 8, slice_len: int = 4,
+                 max_queue: int = 256, clock=time.monotonic):
+        if max_batch < 1 or slice_len < 1 or max_queue < 1:
+            raise ValueError("max_batch, slice_len and max_queue must "
+                             "be >= 1")
+        self.max_batch = int(max_batch)
+        self.slice_len = int(slice_len)
+        self.max_queue = int(max_queue)
+        self.clock = clock
+        self.stats = GatewayStats()
+        self._lanes: Dict[tuple, _Lane] = {}
+
+    def queued(self) -> int:
+        return sum(len(l.queue) for l in self._lanes.values())
+
+    def submit(self, program: VertexProgram, graph: Graph,
+               config: SystemConfig, *, key=None,
+               max_iters: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               use_pallas: bool = False,
+               sparse_edge_capacity: Optional[int] = None,
+               autotune=None) -> Ticket:
+        """Admit one query; returns its :class:`Ticket`.
+
+        Raises :class:`AdmissionError` for structurally invalid graphs
+        and :class:`GatewayBackpressure` when the waiting queue is
+        full — both *before* the request touches any lane state.
+        """
+        errors = validate_graph(graph)
+        if errors:
+            self.stats.rejected += 1
+            raise AdmissionError("invalid_graph", errors)
+        if self.queued() >= self.max_queue:
+            self.stats.backpressure_rejections += 1
+            raise GatewayBackpressure(
+                f"{self.queued()} requests already queued "
+                f"(max_queue={self.max_queue})")
+        cap = (None if sparse_edge_capacity is None
+               else int(sparse_edge_capacity))
+        mode = _normalize_autotune(autotune)
+        lane_key = (id(program), config, bool(use_pallas), cap, mode,
+                    bucket_key(graph))
+        lane = self._lanes.get(lane_key)
+        if lane is None:
+            lane = self._lanes[lane_key] = _Lane(
+                program, config, bool(use_pallas), cap, mode)
+        t = Ticket(program, graph, config, key, max_iters, deadline_s)
+        t.enqueued_at = self.clock()
+        lane.queue.append(t)
+        self.stats.record_submit(t)
+        return t
+
+    def poll(self) -> int:
+        """One scheduling round; returns how many slices dispatched."""
+        for lane in self._lanes.values():
+            lane.admit(self.max_batch, self.clock, self.stats)
+        return sum(lane.dispatch(self.slice_len, self.clock, self.stats)
+                   for lane in self._lanes.values())
+
+    def pending(self) -> bool:
+        return any(lane.pending() for lane in self._lanes.values())
+
+    def reset_stats(self) -> GatewayStats:
+        """Swap in a fresh :class:`GatewayStats` (returns the old one).
+        Lanes, rosters and compiled runners stay warm — benchmarks call
+        this after their warmup wave so measured windows exclude
+        roster-growth compiles."""
+        old, self.stats = self.stats, GatewayStats()
+        return old
+
+    def run_until_idle(self, max_rounds: int = 1_000_000) -> None:
+        for _ in range(max_rounds):
+            if not self.pending():
+                return
+            self.poll()
+        raise RuntimeError(f"gateway not idle after {max_rounds} rounds")
+
+
+# ---------------------------------------------------------------------------
+class GraphGateway:
+    """Threaded front-end over :class:`ContinuousScheduler`.
+
+    ``submit`` is safe from any thread and returns immediately with a
+    :class:`Ticket`; a single worker thread runs scheduling rounds
+    whenever work is pending and sleeps otherwise.  Use as a context
+    manager (``with GraphGateway() as gw: ...``) or call
+    ``start()``/``close()`` explicitly; ``drain()`` blocks until every
+    accepted request reached a terminal state.
+    """
+
+    def __init__(self, max_batch: int = 8, slice_len: int = 4,
+                 max_queue: int = 256, clock=time.monotonic):
+        self._sched = ContinuousScheduler(max_batch=max_batch,
+                                          slice_len=slice_len,
+                                          max_queue=max_queue, clock=clock)
+        self._wake = threading.Condition()
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> "GraphGateway":
+        if self._thread is None:
+            self._stop = False
+            self._thread = threading.Thread(target=self._loop,
+                                            name="graph-gateway",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Finish in-flight work, then stop the worker thread."""
+        with self._wake:
+            self._stop = True
+            self._wake.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "GraphGateway":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- API ------------------------------------------------------------
+    def submit(self, program: VertexProgram, graph: Graph,
+               config: SystemConfig, **kw) -> Ticket:
+        with self._wake:
+            if self._thread is None or self._stop:
+                raise RuntimeError("gateway is not running "
+                                   "(use `with GraphGateway() as gw`)")
+            t = self._sched.submit(program, graph, config, **kw)
+            t._on_cancel = self._kick
+            self._wake.notify_all()
+            return t
+
+    def stats(self) -> Dict[str, Any]:
+        with self._wake:
+            return self._sched.stats.snapshot()
+
+    def reset_stats(self) -> None:
+        with self._wake:
+            self._sched.reset_stats()
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._wake:
+                if not self._sched.pending():
+                    return
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("gateway still busy after drain timeout")
+            time.sleep(1e-4)
+
+    def _kick(self) -> None:
+        with self._wake:
+            self._wake.notify_all()
+
+    def _loop(self) -> None:
+        while True:
+            with self._wake:
+                while not self._stop and not self._sched.pending():
+                    self._wake.wait(timeout=0.05)
+                if self._stop and not self._sched.pending():
+                    return
+                self._sched.poll()
+
+
+# ---------------------------------------------------------------------------
+def main(argv: Optional[List[str]] = None) -> None:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if any(a == "--arch" or a.startswith("--arch=") for a in argv):
+        warnings.warn(
+            "the LM serving demo moved to repro.launch.lm_demo; "
+            "`python -m repro.launch.serve --arch ...` forwards there "
+            "and will be removed", DeprecationWarning, stacklevel=2)
+        from repro.launch import lm_demo
+        return lm_demo.main(argv)
+
+    ap = argparse.ArgumentParser(
+        description="streaming graph-serving gateway demo")
+    ap.add_argument("--app", default="BFS")
+    ap.add_argument("--config", default="DG1")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--pool", type=int, default=6,
+                    help="distinct graphs cycled through the stream")
+    ap.add_argument("--scale", type=int, default=5,
+                    help="R-MAT scale of the pool graphs")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--slice-len", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    from repro.algorithms import REGISTRY
+    from repro.graph import rmat_batch
+
+    prog = REGISTRY[args.app]()
+    config = SystemConfig.from_name(args.config)
+    pool = rmat_batch(args.pool, args.scale, seed=7)
+    with GraphGateway(max_batch=args.max_batch,
+                      slice_len=args.slice_len) as gw:
+        tickets = [gw.submit(prog, pool[i % len(pool)], config)
+                   for i in range(args.requests)]
+        results = [t.result(timeout=600) for t in tickets]
+        snap = gw.stats()
+    print(f"{args.app}/{args.config}: {len(results)} requests, "
+          f"{snap['slices']} slices, "
+          f"{snap['roster_rebuilds']} roster rebuilds")
+    print(f"p50 {snap['latency_p50_ms']:.1f} ms  "
+          f"p99 {snap['latency_p99_ms']:.1f} ms  "
+          f"throughput {snap['throughput_rps']:.1f} req/s  "
+          f"occupancy {snap['mean_occupancy']:.2f}")
 
 
 if __name__ == "__main__":

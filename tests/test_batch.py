@@ -10,6 +10,13 @@ SSSP; (3) ragged-batch padding invariance — adding graphs to a batch
 never changes another graph's results; (4) bucket keys are stable under
 within-quantum size perturbations; (5) the plan cache amortizes repeat
 batches and the whole batch costs one timed dispatch.
+
+Plus the ISSUE-7 property battery (``TestHostPacking``,
+``TestInterleavingProperties``): the host-side pack/unpack the gateway
+repacks with between slices is bit-equal to the device path, and
+**arbitrary** seeded arrival/retirement interleavings through the
+continuous scheduler preserve unbatch-equals-sequential, lane/bucket
+stability, and plan-cache warmth.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -278,3 +285,166 @@ class TestServingAmortization:
         for s, b in zip(seq, bat):
             _results_identical(s, b)
             assert all(o == -1.0 for o in b.occupancy_trace)
+
+
+def _serve_graphs():
+    """The mixed-bucket pair as a plain cached helper: the @given
+    property tests below cannot take pytest fixtures (the hypothesis
+    fallback shim hides the test signature from pytest)."""
+    global _SERVE_GRAPHS
+    try:
+        return _SERVE_GRAPHS
+    except NameError:
+        from repro.graph import grid_graph
+        _SERVE_GRAPHS = [rmat_graph(5, 8, seed=1, weighted=True),
+                         grid_graph(7, seed=0, weighted=True)]
+        assert bucket_key(_SERVE_GRAPHS[0]) == bucket_key(_SERVE_GRAPHS[1])
+        return _SERVE_GRAPHS
+
+
+def _serve_seq():
+    global _SERVE_SEQ
+    try:
+        return _SERVE_SEQ
+    except NameError:
+        prog = REGISTRY["BFS"]()
+        config = SystemConfig.from_name("DG1")
+        _SERVE_SEQ = (prog, config,
+                      {id(g): run(prog, g, config)
+                       for g in _serve_graphs()})
+        return _SERVE_SEQ
+
+
+class TestHostPacking:
+    """The numpy pack/unpack pair the gateway repacks with between
+    slices must be bit-equal to the jnp pair — otherwise every slice
+    boundary would perturb results."""
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=5, deadline=None)
+    def test_host_pack_matches_device_pack(self, seed):
+        mixed_graphs = _serve_graphs()
+        batch = pack_graphs(mixed_graphs)
+        rng = np.random.default_rng(seed)
+        states = [{"x": rng.standard_normal(g.n_nodes).astype(np.float32),
+                   "it": np.int32(rng.integers(0, 99)),
+                   "m": rng.integers(-5, 5, (g.n_nodes, 2)).astype(
+                       np.int32)}
+                  for g in mixed_graphs]
+        host = batch.pack_state_host(states, pad={"x": 1.5})
+        dev = batch.pack_state(
+            [{k: jnp.asarray(v) for k, v in s.items()} for s in states],
+            pad={"x": 1.5})
+        for k in host:
+            assert np.array_equal(np.asarray(host[k]),
+                                  np.asarray(dev[k])), k
+        for h, d in zip(batch.unpack_state_host(host),
+                        batch.unpack_state(dev)):
+            for k in h:
+                assert np.array_equal(np.asarray(h[k]),
+                                      np.asarray(d[k])), k
+
+    def test_host_roundtrip_is_identity(self, mixed_graphs):
+        batch = pack_graphs(mixed_graphs)
+        rng = np.random.default_rng(0)
+        states = [{"x": rng.standard_normal(g.n_nodes).astype(np.float32)}
+                  for g in mixed_graphs]
+        out = batch.unpack_state_host(batch.pack_state_host(states))
+        for orig, got in zip(states, out):
+            assert np.array_equal(orig["x"], got["x"])
+
+
+class TestInterleavingProperties:
+    """Gateway property battery: random arrival/cancellation
+    interleavings through the continuous scheduler never change what a
+    request computes, which lane it lands on, or cache warmth."""
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=8, deadline=None)
+    def test_arbitrary_interleavings_match_sequential(self, seed):
+        from repro.launch.serve import CancelledError, ContinuousScheduler
+        prog, config, seq = _serve_seq()
+        graphs = _serve_graphs()
+        rng = np.random.default_rng(seed)
+        sched = ContinuousScheduler(
+            max_batch=int(rng.integers(1, 4)),
+            slice_len=int(rng.integers(1, 5)))
+        n_req = int(rng.integers(3, 9))
+        plan = [(int(rng.integers(0, 5)),            # arrival round
+                 graphs[int(rng.integers(0, len(graphs)))],
+                 bool(rng.random() < 0.2))           # cancel it?
+                for _ in range(n_req)]
+        tickets = []
+        for rnd in range(5):
+            for due, g, cancel in plan:
+                if due == rnd:
+                    t = sched.submit(prog, g, config)
+                    tickets.append((g, cancel, t))
+                    if cancel:
+                        t.cancel()
+            sched.poll()
+        sched.run_until_idle()
+        for g, cancel, t in tickets:
+            if cancel:
+                with pytest.raises(CancelledError):
+                    t.result(timeout=1)
+            else:
+                res, s = t.result(timeout=1), seq[id(g)]
+                assert res.iterations == s.iterations
+                assert res.converged and not res.timed_out
+                assert res.direction_trace == s.direction_trace
+                for k in s.state:
+                    assert bool(jnp.array_equal(res.state[k],
+                                                s.state[k])), k
+        # bucket/lane stability: same-bucket graphs shared one lane
+        assert len(sched._lanes) == 1
+        assert len({bucket_key(g) for g in graphs}) == 1
+
+    def test_steady_roster_never_touches_pack_cache(self):
+        """Repeat waves over an unchanged roster are fully warm: no
+        batch rebuilds, so not even a cache *lookup* — the lane reuses
+        its bound batch/context outright."""
+        from repro.launch.serve import ContinuousScheduler
+        prog, config, _ = _serve_seq()
+        graphs = _serve_graphs()
+        sched = ContinuousScheduler(max_batch=len(graphs), slice_len=2)
+        for g in graphs:                       # wave 0: roster grows
+            sched.submit(prog, g, config)
+        sched.run_until_idle()
+        sched.reset_stats()
+        pack0 = PLAN_CACHE.kind_stats("batch_pack")
+        for _ in range(3):                     # repeat waves
+            for g in graphs:
+                sched.submit(prog, g, config)
+            sched.run_until_idle()
+        assert sched.stats.roster_rebuilds == 0
+        assert PLAN_CACHE.kind_stats("batch_pack") == pack0
+
+    def test_repack_events_hit_plan_cache(self):
+        """When roster membership *does* churn (max_batch=1 forces an
+        alternating pair to swap the slot), every rebuild after the
+        first cycle is a pure batch_pack/batch_context cache hit —
+        per-kind hit counters from PLAN_CACHE prove the repack stayed
+        plan-cache-warm."""
+        from repro.launch.serve import ContinuousScheduler
+        prog, config, _ = _serve_seq()
+        g1, g2 = _serve_graphs()
+        sched = ContinuousScheduler(max_batch=1, slice_len=2)
+        for g in (g1, g2):                     # first cycle may miss
+            sched.submit(prog, g, config)
+            sched.run_until_idle()
+        sched.reset_stats()
+        pack0 = PLAN_CACHE.kind_stats("batch_pack")
+        ctx0 = PLAN_CACHE.kind_stats("batch_context")
+        cycles = 3
+        for _ in range(cycles):                # every swap is a rebuild
+            for g in (g1, g2):
+                sched.submit(prog, g, config)
+                sched.run_until_idle()
+        assert sched.stats.roster_rebuilds == 2 * cycles
+        pack1 = PLAN_CACHE.kind_stats("batch_pack")
+        ctx1 = PLAN_CACHE.kind_stats("batch_context")
+        assert pack1["misses"] == pack0["misses"]
+        assert ctx1["misses"] == ctx0["misses"]
+        assert pack1["hits"] == pack0["hits"] + 2 * cycles
+        assert ctx1["hits"] == ctx0["hits"] + 2 * cycles

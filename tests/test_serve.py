@@ -1,0 +1,230 @@
+"""Streaming gateway: continuous batching is invisible to results.
+
+Covers the ISSUE-7 contract: (1) requests served through the gateway
+are bit-identical to sequential ``run()`` regardless of arrival order,
+cohort composition, or how many join/retire boundaries they crossed
+(PR, the float-SUM program, matches to float tolerance); (2) randomized
+programs (CLR/MIS) are deterministic through the gateway — their
+default keys depend only on the graph, never on batch composition or
+admission order; (3) the threaded front-end serves concurrent clients
+correctly; (4) steady-state traffic is plan-cache-warm — re-admitting
+known graphs rebuilds nothing; (5) lifecycle instrumentation
+(timestamps, counters, snapshot schema) is coherent; (6) the relocated
+LM demo still reachable through the old entry point.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.algorithms import REGISTRY
+from repro.core import PLAN_CACHE, SystemConfig, run
+from repro.core.batch import bucket_key
+from repro.graph import grid_graph, rmat_graph
+from repro.launch.serve import ContinuousScheduler, GraphGateway
+
+CFG = SystemConfig.from_name("DG1")
+
+
+@pytest.fixture(scope="module")
+def pool():
+    """Two same-bucket graphs (one lane, B=2 packing) plus one from a
+    different bucket (its own lane)."""
+    g1 = rmat_graph(5, 8, seed=1, weighted=True)
+    g2 = grid_graph(7, seed=0, weighted=True)
+    g3 = rmat_graph(7, 8, seed=2, weighted=True)
+    assert bucket_key(g1) == bucket_key(g2)
+    assert bucket_key(g1) != bucket_key(g3)
+    return [g1, g2, g3]
+
+
+def _state_equal(a, b, exact=True):
+    assert set(a) == set(b)
+    for k in a:
+        x, y = np.asarray(a[k]), np.asarray(b[k])
+        if exact:
+            assert np.array_equal(x, y), k
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-7,
+                                       err_msg=k)
+
+
+def _gateway_matches_sequential(res, seq, exact=True):
+    assert res.engine == "gateway"
+    assert res.converged == seq.converged
+    assert res.iterations == seq.iterations
+    assert res.direction_trace == seq.direction_trace
+    assert res.occupancy_trace == seq.occupancy_trace
+    assert not res.timed_out
+    _state_equal(res.state, seq.state, exact=exact)
+
+
+class TestBitIdenticalThroughGateway:
+    @pytest.mark.parametrize("app", ["BFS", "SSSP", "CC", "CLR", "MIS",
+                                     "PR"])
+    def test_staggered_arrivals_match_sequential(self, pool, app):
+        """Requests arriving on different scheduling rounds — so each
+        crosses different join/retire boundaries — still reproduce
+        sequential ``run()`` (PR to float tolerance, rest bitwise)."""
+        prog = REGISTRY[app]()
+        seq = {id(g): run(prog, g, CFG) for g in pool}
+        sched = ContinuousScheduler(max_batch=4, slice_len=3)
+        arrivals = {0: [pool[0]], 1: [pool[2]], 2: [pool[1], pool[0]]}
+        tickets = []
+        for rnd in range(4):
+            for g in arrivals.get(rnd, []):
+                tickets.append((g, sched.submit(prog, g, CFG)))
+            sched.poll()
+        sched.run_until_idle()
+        for g, t in tickets:
+            _gateway_matches_sequential(t.result(timeout=1), seq[id(g)],
+                                        exact=(app != "PR"))
+
+    def test_cohort_independence(self, pool):
+        """The same graph served solo and served inside a churning
+        cohort returns the identical result."""
+        prog = REGISTRY["BFS"]()
+        g = pool[0]
+        solo_sched = ContinuousScheduler(max_batch=1, slice_len=2)
+        t_solo = solo_sched.submit(prog, g, CFG)
+        solo_sched.run_until_idle()
+        cohort = ContinuousScheduler(max_batch=4, slice_len=2)
+        t_in = cohort.submit(prog, g, CFG)
+        cohort.submit(prog, pool[1], CFG)
+        cohort.poll()                       # duo in flight
+        t_late = cohort.submit(prog, g, CFG)  # joins mid-stream
+        cohort.run_until_idle()
+        for t in (t_solo, t_in, t_late):
+            _gateway_matches_sequential(t.result(timeout=1),
+                                        run(prog, g, CFG))
+
+
+class TestRandomizedProgramDeterminism:
+    @pytest.mark.parametrize("app", ["CLR", "MIS"])
+    def test_keys_independent_of_cohort_and_order(self, pool, app):
+        """CLR/MIS default keys derive from the graph alone: admission
+        order and batch composition never change the answer."""
+        prog = REGISTRY[app]()
+        g = pool[0]
+        seq = run(prog, g, CFG)
+        outcomes = []
+        for order in ([g, pool[1]], [pool[1], g], [g]):
+            sched = ContinuousScheduler(max_batch=4, slice_len=3)
+            ts = {id(x): sched.submit(prog, x, CFG) for x in order}
+            sched.run_until_idle()
+            outcomes.append(ts[id(g)].result(timeout=1))
+        for res in outcomes:
+            _gateway_matches_sequential(res, seq)
+
+
+class TestThreadedGateway:
+    def test_concurrent_clients(self, pool):
+        prog = REGISTRY["BFS"]()
+        seq = {id(g): run(prog, g, CFG) for g in pool}
+        n_req, n_clients = 12, 3
+        results = [None] * n_req
+        with GraphGateway(max_batch=4, slice_len=4) as gw:
+            def client(k):
+                for i in range(k, n_req, n_clients):
+                    g = pool[i % len(pool)]
+                    results[i] = (g, gw.submit(prog, g, CFG)
+                                  .result(timeout=120))
+            threads = [threading.Thread(target=client, args=(k,))
+                       for k in range(n_clients)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            snap = gw.stats()
+        for g, res in results:
+            _gateway_matches_sequential(res, seq[id(g)])
+        assert snap["submitted"] == snap["completed"] == n_req
+        assert snap["converged"] == n_req
+        assert snap["throughput_rps"] > 0
+
+    def test_submit_requires_running_gateway(self, pool):
+        gw = GraphGateway()
+        with pytest.raises(RuntimeError, match="not running"):
+            gw.submit(REGISTRY["BFS"](), pool[0], CFG)
+
+
+class TestPlanCacheWarmth:
+    def test_steady_state_repeat_traffic_rebuilds_nothing(self, pool):
+        """Once the roster holds a graph, re-admitting it is pure cache:
+        no roster rebuild, no new pack/context/init misses."""
+        prog = REGISTRY["BFS"]()
+        sched = ContinuousScheduler(max_batch=2, slice_len=4)
+        for g in pool[:2]:
+            sched.submit(prog, g, CFG)
+        sched.run_until_idle()
+        assert sched.stats.roster_rebuilds >= 1      # initial growth
+        sched.reset_stats()
+        pack0 = PLAN_CACHE.kind_stats("batch_pack")
+        ctx0 = PLAN_CACHE.kind_stats("batch_context")
+        init0 = PLAN_CACHE.kind_stats("init_state")
+        for g in pool[:2]:
+            sched.submit(prog, g, CFG)
+        sched.run_until_idle()
+        assert sched.stats.roster_rebuilds == 0
+        pack1 = PLAN_CACHE.kind_stats("batch_pack")
+        ctx1 = PLAN_CACHE.kind_stats("batch_context")
+        init1 = PLAN_CACHE.kind_stats("init_state")
+        assert pack1["misses"] == pack0["misses"]
+        assert ctx1["misses"] == ctx0["misses"]
+        assert init1["misses"] == init0["misses"]
+        assert init1["hits"] >= init0["hits"] + 2    # memoized init reused
+
+    def test_lanes_split_by_config_and_bucket(self, pool):
+        prog = REGISTRY["BFS"]()
+        sched = ContinuousScheduler(max_batch=4, slice_len=2)
+        sched.submit(prog, pool[0], CFG)
+        sched.submit(prog, pool[1], CFG)              # same lane
+        sched.submit(prog, pool[2], CFG)              # other bucket
+        sched.submit(prog, pool[0], SystemConfig.from_name("SG0"))
+        assert len(sched._lanes) == 3
+        sched.run_until_idle()
+
+
+class TestLifecycleInstrumentation:
+    def test_timestamps_and_snapshot_schema(self, pool):
+        prog = REGISTRY["BFS"]()
+        sched = ContinuousScheduler(max_batch=2, slice_len=2)
+        t = sched.submit(prog, pool[0], CFG)
+        sched.run_until_idle()
+        res = t.result(timeout=1)
+        assert res.dispatches >= 1
+        assert (t.enqueued_at <= t.admitted_at <= t.first_dispatch_at
+                <= t.completed_at)
+        snap = sched.stats.snapshot()
+        for k in ("submitted", "admitted", "completed", "converged",
+                  "timed_out", "cancelled", "rejected",
+                  "backpressure_rejections", "slices", "roster_rebuilds",
+                  "dispatch_seconds", "latency_p50_ms", "latency_p99_ms",
+                  "queue_delay_p50_ms", "mean_occupancy",
+                  "throughput_rps"):
+            assert k in snap, k
+        assert snap["completed"] == snap["converged"] == 1
+        assert snap["latency_p50_ms"] > 0
+        assert 0 < snap["mean_occupancy"] <= 1
+        assert sched.stats.requests[0]["outcome"] == "converged"
+
+    def test_result_timeout_when_not_polled(self, pool):
+        sched = ContinuousScheduler()
+        t = sched.submit(REGISTRY["BFS"](), pool[0], CFG)
+        with pytest.raises(TimeoutError):
+            t.result(timeout=0.01)
+
+
+class TestLMDemoRelocation:
+    def test_old_entry_point_forwards_with_deprecation(self, monkeypatch):
+        from repro.launch import lm_demo, serve
+        called = {}
+        monkeypatch.setattr(lm_demo, "main",
+                            lambda argv: called.setdefault("argv", argv))
+        with pytest.warns(DeprecationWarning, match="lm_demo"):
+            serve.main(["--arch", "starcoder2-7b", "--gen", "1"])
+        assert called["argv"] == ["--arch", "starcoder2-7b", "--gen", "1"]
+
+    def test_lm_demo_importable(self):
+        from repro.launch import lm_demo
+        assert callable(lm_demo.main)

@@ -1,0 +1,212 @@
+"""Gateway fault injection: bad inputs fail fast, neighbours unharmed.
+
+Covers the ISSUE-7 fault battery: (1) structurally malformed graphs —
+negative row offsets, dangling edge endpoints, NaN weights, length
+mismatches — are rejected at admission with a structured
+:class:`AdmissionError` and never reach (or poison) an in-flight
+batch; (2) cancellation retires cleanly both while queued and
+mid-flight, with cohabitants bit-identical to solo; (3) per-request
+deadlines return the partial state flagged ``timed_out`` — exactly the
+state a sequential ``run(max_iters=...)`` of the completed iterations
+produces — while batch-mates still converge bit-identically; (4)
+bounded-queue backpressure rejects excess arrivals without losing
+accepted work.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.algorithms import REGISTRY
+from repro.core import SystemConfig, run
+from repro.graph import grid_graph, rmat_graph
+from repro.graph.structure import validate_graph
+from repro.launch.serve import (AdmissionError, CancelledError,
+                                ContinuousScheduler, GatewayBackpressure)
+
+CFG = SystemConfig.from_name("DG1")
+
+
+@pytest.fixture(scope="module")
+def good_pair():
+    """Same-bucket pair: a fault injected alongside one must leave the
+    other's in-batch result untouched."""
+    return [rmat_graph(5, 8, seed=1, weighted=True),
+            grid_graph(7, seed=0, weighted=True)]
+
+
+def _corrupt(g, **field_edits):
+    return dataclasses.replace(g, **field_edits)
+
+
+def _neg_offsets(g):
+    rp = np.asarray(g.row_ptr_out).copy()
+    rp[1] = -3
+    return _corrupt(g, row_ptr_out=rp)
+
+
+def _dangling_edge(g):
+    dst = np.asarray(g.dst).copy()
+    dst[0] = g.n_nodes + 5
+    return _corrupt(g, dst=dst)
+
+
+def _nan_weights(g):
+    w = np.asarray(g.weight).copy()
+    w[::7] = np.nan
+    return _corrupt(g, weight=w)
+
+
+def _short_degree(g):
+    return _corrupt(g, out_degree=np.asarray(g.out_degree)[:-1])
+
+
+FAULTS = {"negative_offsets": _neg_offsets,
+          "dangling_edge": _dangling_edge,
+          "nan_weights": _nan_weights,
+          "length_mismatch": _short_degree}
+
+
+class TestAdmissionRejection:
+    @pytest.mark.parametrize("fault", sorted(FAULTS))
+    def test_malformed_graph_rejected_with_structured_error(
+            self, good_pair, fault):
+        bad = FAULTS[fault](good_pair[0])
+        assert validate_graph(bad)           # the validator sees it...
+        sched = ContinuousScheduler()
+        with pytest.raises(AdmissionError) as exc:
+            sched.submit(REGISTRY["BFS"](), bad, CFG)
+        assert exc.value.code == "invalid_graph"
+        assert exc.value.errors                # ...and submit surfaces it
+        assert sched.stats.rejected == 1
+        assert sched.stats.submitted == 0      # never entered a lane
+        assert not sched.pending()
+
+    def test_valid_graph_passes_validator(self, good_pair):
+        assert validate_graph(good_pair[0]) == []
+
+    def test_rejection_never_poisons_in_flight_batch(self, good_pair):
+        """A malformed arrival mid-stream leaves the already-admitted
+        cohort's results bit-identical to sequential."""
+        prog = REGISTRY["BFS"]()
+        seq = [run(prog, g, CFG) for g in good_pair]
+        sched = ContinuousScheduler(max_batch=4, slice_len=2)
+        tickets = [sched.submit(prog, g, CFG) for g in good_pair]
+        sched.poll()                         # cohort is now in flight
+        for fault in FAULTS.values():
+            with pytest.raises(AdmissionError):
+                sched.submit(prog, fault(good_pair[0]), CFG)
+        sched.run_until_idle()
+        for t, s in zip(tickets, seq):
+            res = t.result(timeout=1)
+            assert res.converged and res.iterations == s.iterations
+            for k in s.state:
+                assert np.array_equal(np.asarray(res.state[k]),
+                                      np.asarray(s.state[k])), k
+
+
+class TestCancellation:
+    def test_cancel_while_queued(self, good_pair):
+        sched = ContinuousScheduler()
+        t = sched.submit(REGISTRY["BFS"](), good_pair[0], CFG)
+        t.cancel()
+        sched.poll()
+        with pytest.raises(CancelledError):
+            t.result(timeout=1)
+        assert sched.stats.cancelled == 1
+        assert sched.stats.completed == 0    # cancelled != completed
+        assert not sched.pending()
+
+    def test_cancel_mid_flight_retires_cleanly(self, good_pair):
+        """Cancelling an in-flight request frees its slot at the next
+        slice boundary; its batch-mate finishes bit-identical to solo."""
+        prog = REGISTRY["BFS"]()
+        seq = run(prog, good_pair[1], CFG)
+        sched = ContinuousScheduler(max_batch=4, slice_len=1)
+        t_cancel = sched.submit(prog, good_pair[0], CFG)
+        t_mate = sched.submit(prog, good_pair[1], CFG)
+        sched.poll()                         # both mid-flight now
+        assert not t_cancel.done()
+        t_cancel.cancel()
+        sched.run_until_idle()
+        with pytest.raises(CancelledError):
+            t_cancel.result(timeout=1)
+        res = t_mate.result(timeout=1)
+        assert res.iterations == seq.iterations and res.converged
+        for k in seq.state:
+            assert np.array_equal(np.asarray(res.state[k]),
+                                  np.asarray(seq.state[k])), k
+
+
+class TestDeadlines:
+    def test_expired_deadline_returns_flagged_partial_state(
+            self, good_pair):
+        """deadline_s=0 expires at the first slice boundary: the result
+        carries ``timed_out=True`` and exactly the state sequential
+        ``run(max_iters=<completed iterations>)`` produces; the
+        cohabitant without a deadline converges bit-identical to solo."""
+        prog = REGISTRY["BFS"]()
+        g_slow, g_mate = good_pair[1], good_pair[0]
+        full = run(prog, g_slow, CFG)
+        seq_mate = run(prog, g_mate, CFG)
+        slice_len = 2
+        assert full.iterations > slice_len   # the deadline truly cuts it
+        sched = ContinuousScheduler(max_batch=4, slice_len=slice_len)
+        t_dead = sched.submit(prog, g_slow, CFG, deadline_s=0.0)
+        t_mate = sched.submit(prog, g_mate, CFG)
+        sched.run_until_idle()
+        res = t_dead.result(timeout=1)
+        assert res.timed_out and not res.converged
+        assert res.iterations == slice_len   # one slice, then expired
+        partial = run(prog, g_slow, CFG, max_iters=res.iterations)
+        for k in partial.state:
+            assert np.array_equal(np.asarray(res.state[k]),
+                                  np.asarray(partial.state[k])), k
+        assert sched.stats.timed_out == 1
+        mate = t_mate.result(timeout=1)
+        assert mate.converged and not mate.timed_out
+        assert mate.iterations == seq_mate.iterations
+        for k in seq_mate.state:
+            assert np.array_equal(np.asarray(mate.state[k]),
+                                  np.asarray(seq_mate.state[k])), k
+
+    def test_generous_deadline_never_fires(self, good_pair):
+        prog = REGISTRY["BFS"]()
+        sched = ContinuousScheduler(max_batch=2, slice_len=4)
+        t = sched.submit(prog, good_pair[0], CFG, deadline_s=3600.0)
+        sched.run_until_idle()
+        res = t.result(timeout=1)
+        assert res.converged and not res.timed_out
+        assert sched.stats.timed_out == 0
+
+
+class TestBackpressure:
+    def test_bounded_queue_rejects_excess_then_recovers(self, good_pair):
+        prog = REGISTRY["BFS"]()
+        sched = ContinuousScheduler(max_batch=2, slice_len=4, max_queue=2)
+        accepted = [sched.submit(prog, good_pair[i % 2], CFG)
+                    for i in range(2)]
+        with pytest.raises(GatewayBackpressure):
+            sched.submit(prog, good_pair[0], CFG)
+        assert sched.stats.backpressure_rejections == 1
+        sched.run_until_idle()               # queue drains...
+        late = sched.submit(prog, good_pair[0], CFG)  # ...and recovers
+        sched.run_until_idle()
+        for t in accepted + [late]:
+            assert t.result(timeout=1).converged
+
+    def test_iteration_limit_outcome(self, good_pair):
+        """max_iters through the gateway matches sequential run()'s
+        non-converged partial result."""
+        prog = REGISTRY["BFS"]()
+        seq = run(prog, good_pair[1], CFG, max_iters=3)
+        assert not seq.converged
+        sched = ContinuousScheduler(max_batch=2, slice_len=3)
+        t = sched.submit(prog, good_pair[1], CFG, max_iters=3)
+        sched.run_until_idle()
+        res = t.result(timeout=1)
+        assert not res.converged and not res.timed_out
+        assert res.iterations == seq.iterations == 3
+        for k in seq.state:
+            assert np.array_equal(np.asarray(res.state[k]),
+                                  np.asarray(seq.state[k])), k
