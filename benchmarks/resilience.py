@@ -1,0 +1,174 @@
+"""Resilience benchmark: checkpointing overhead and recovery payoff,
+tracked as ``results/BENCH_resilience.json``.
+
+Two questions, both against the pinned dispatch workload so the
+trajectory is comparable across commits:
+
+1. **What does checkpointing cost when nothing goes wrong?**  PR (the
+   longest-converging pinned app — see ``APP``) runs every cell of the
+   18-config design space under the plain fused engine and under
+   ``checkpoint_every=DEFAULT_CHECKPOINT_EVERY`` with the full
+   sentinel battery; ``efficiency = fused_us / ckpt_us`` (1.0 = free)
+   and the two final states must be **bit-identical** — segmenting the
+   while_loop never changes the math, it only bounds how much a fault
+   can destroy.
+
+2. **What does a checkpoint buy when something does go wrong?**  A NaN
+   is injected late into a PR run (the app with the longest pinned
+   convergence) and recovery is timed with a warm checkpoint ring
+   (rolls back one short segment) vs ``ring_capacity=1`` (only the
+   pinned initial snapshot survives — cold-restart semantics).
+   ``recovery_speedup = cold_seconds / ckpt_seconds``.
+
+The CI gate (benchmarks/compare.py) tracks both, capped below their
+noise floors like the serve metrics: healthy runs saturate the caps
+and read exactly 1.0 run-to-run, so the gate only trips when
+checkpointing genuinely stops being cheap (or recovery stops beating
+a cold restart) — or when any config loses bit-identity, which the
+``identical`` metric turns into an unmissable regression.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))          # `benchmarks` package
+sys.path.insert(0, str(_ROOT / "src"))  # `repro` package
+
+import jax
+import numpy as np
+
+from benchmarks.dispatch import PINNED_WORKLOAD
+from repro.algorithms import REGISTRY
+from repro.core import ALL_CONFIGS, SystemConfig, run
+from repro.core.resilience import (DEFAULT_CHECKPOINT_EVERY,
+                                   DEFAULT_RING_CAPACITY, RetryPolicy)
+from repro.graph import rmat_graph
+from repro.testing.faults import NaNFault
+
+__all__ = ["run_resilience_bench"]
+
+#: PR, not BFS: the overhead question is only meaningful against a run
+#: long enough to amortize a segment boundary (PR's pinned convergence
+#: is ~20 iterations; BFS converges in 4, where the one boundary
+#: snapshot reads as a huge relative "overhead" of a degenerate run).
+APP = "PR"
+RECOVERY_APP = "PR"
+REPEATS = 10
+SMOKE_SCALE = 9
+#: recovery segment length: short relative to PR's pinned convergence
+#: (~24 iterations) so the warm ring resumes close to the fault while
+#: the cold restart replays the whole prefix.
+RECOVERY_K = 4
+
+
+def _states_equal(a, b) -> bool:
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            return False
+    return True
+
+
+def _best(fn, repeats):
+    best = None
+    for _ in range(repeats):
+        r = fn()
+        if best is None or r.seconds < best.seconds:
+            best = r
+    return best
+
+
+def run_resilience_bench(out_path: str = "results/BENCH_resilience.json",
+                         smoke: bool = False,
+                         repeats: int | None = None) -> dict:
+    repeats = repeats if repeats is not None else (5 if smoke else REPEATS)
+    wl = dict(PINNED_WORKLOAD)
+    if smoke:
+        wl["scale"] = SMOKE_SCALE
+    program = REGISTRY[APP]()
+    g = rmat_graph(weighted=program.weighted, **wl)
+    K = DEFAULT_CHECKPOINT_EVERY
+
+    configs = {}
+    for cfg in ALL_CONFIGS:
+        config = SystemConfig.from_name(cfg.name)
+        plain = _best(lambda: run(program, g, config), repeats)
+        ckpt = _best(lambda: run(program, g, config, checkpoint_every=K),
+                     repeats)
+        plain_us = plain.seconds * 1e6 / max(plain.iterations, 1)
+        ckpt_us = ckpt.seconds * 1e6 / max(ckpt.iterations, 1)
+        configs[cfg.name] = {
+            "fused_us_per_iteration": plain_us,
+            "ckpt_us_per_iteration": ckpt_us,
+            "iterations": ckpt.iterations,
+            "efficiency": plain_us / max(ckpt_us, 1e-12),
+            "bit_identical": _states_equal(plain.state, ckpt.state),
+        }
+
+    # recovery: fault late in the longest-running pinned app, recover
+    # from a warm ring vs from only the pinned initial snapshot
+    rprog = REGISTRY[RECOVERY_APP]()
+    rcfg = SystemConfig.from_name("DG1")
+    clean = run(rprog, g, rcfg)
+    at = max(2 * RECOVERY_K, clean.iterations - RECOVERY_K)
+    retry = RetryPolicy(max_attempts=3)
+
+    def recover(capacity):
+        def once():
+            t0 = time.perf_counter()
+            r = run(rprog, g, rcfg, checkpoint_every=RECOVERY_K,
+                    retry=retry, ring_capacity=capacity,
+                    fault_injector=NaNFault(at_iteration=at))
+            assert r.converged and r.fault["recovered"], r.outcome
+            r.seconds = time.perf_counter() - t0
+            return r
+        return _best(once, repeats)
+
+    warm = recover(DEFAULT_RING_CAPACITY)
+    cold = recover(1)
+    recovery = {
+        "app": RECOVERY_APP, "fault": "nan", "at_iteration": int(at),
+        "checkpoint_every": RECOVERY_K,
+        "clean_iterations": clean.iterations,
+        "ckpt_seconds": warm.seconds,
+        "cold_restart_seconds": cold.seconds,
+        "recovery_speedup": cold.seconds / max(warm.seconds, 1e-12),
+    }
+
+    effs = [c["efficiency"] for c in configs.values()]
+    geomean_eff = math.exp(sum(math.log(max(e, 1e-12)) for e in effs)
+                           / len(effs))
+    result = {
+        "workload": {"generator": "rmat", **wl, "app": APP,
+                     "n_nodes": g.n_nodes, "n_edges": g.n_edges},
+        "smoke": bool(smoke),
+        "checkpoint_every": K,
+        "repeats": repeats,
+        "configs": configs,
+        "recovery": recovery,
+        "summary": {
+            "n_configs": len(configs),
+            "n_bit_identical": sum(c["bit_identical"]
+                                   for c in configs.values()),
+            "geomean_efficiency": geomean_eff,
+            "geomean_overhead_pct": (1.0 / geomean_eff - 1.0) * 100.0,
+            "recovery_speedup": recovery["recovery_speedup"],
+        },
+    }
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2))
+    s = result["summary"]
+    print(f"resilience_bench,{len(configs)},"
+          f"bit_identical={s['n_bit_identical']}/{s['n_configs']};"
+          f"ckpt_overhead={s['geomean_overhead_pct']:.1f}%;"
+          f"recovery_speedup={s['recovery_speedup']:.2f}x", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    run_resilience_bench(smoke="--smoke" in sys.argv[1:])

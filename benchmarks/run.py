@@ -59,6 +59,16 @@ def main() -> None:
     ap.add_argument("--serve-smoke", action="store_true",
                     help="with --serve-only: tiny pool, 64 requests (the "
                          "CI smoke job)")
+    ap.add_argument("--resilience-only", action="store_true",
+                    help="only run the checkpoint-overhead / fault-"
+                         "recovery benchmark and write results/"
+                         "BENCH_resilience.json (checkpointed-vs-plain "
+                         "fused us/iteration across the 18 configs, "
+                         "bit-identity, and warm-ring vs cold-restart "
+                         "recovery from an injected NaN)")
+    ap.add_argument("--resilience-smoke", action="store_true",
+                    help="with --resilience-only: tiny graph, 3 repeats "
+                         "(the CI smoke job)")
     ap.add_argument("--matrix-only", action="store_true",
                     help="only run the 6-app x 6-input workload matrix "
                          "and write results/BENCH_matrix.json (per-cell "
@@ -90,6 +100,11 @@ def main() -> None:
     if args.serve_only:
         from benchmarks.serve import run_serve_bench
         run_serve_bench(smoke=args.serve_smoke)
+        return
+
+    if args.resilience_only:
+        from benchmarks.resilience import run_resilience_bench
+        run_resilience_bench(smoke=args.resilience_smoke)
         return
 
     if args.json or args.dispatch_only:  # --dispatch-only implies --json

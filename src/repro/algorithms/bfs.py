@@ -63,10 +63,44 @@ def bfs(source: int = 0, max_iters: int = 4096) -> VertexProgram:
     def converged(prev, cur):
         return ~jnp.any(cur["active"])
 
+    # Resilience protocol.  Depths are not raw-monotone (-1 -> level), so
+    # instead of a monotone decl BFS pins the two invariants the level-
+    # synchronous traversal does maintain between checkpoints: visited
+    # depths never change, and every depth is -1 or a valid level.
+    sentinels = {
+        "depth_frozen": lambda p, c: jnp.all(jnp.where(
+            p["depth"] != _UNSEEN, c["depth"] == p["depth"], True)),
+        "depth_range": lambda p, c: jnp.all(
+            (c["depth"] == _UNSEEN)
+            | ((c["depth"] >= 0) & (c["depth"] < c["depth"].shape[0]))),
+    }
+
+    # Certificate: one dense O(E) relaxation from the visited set.  At a
+    # true BFS fixpoint every reached vertex's depth equals
+    # min(depth[parent]) + 1 and every vertex with a visited neighbour
+    # is itself visited — a dropped update (vertex reverted to unseen)
+    # or an inflated/deflated depth cannot satisfy both.
+    cert_phase = EdgePhase(
+        monoid=MIN,
+        vprop=lambda st, src, w: st["depth"][src] + 1,
+        spred=lambda st, src: st["depth"][src] != _UNSEEN,
+    )
+
+    def certificate(ctx, st):
+        d = st["depth"]
+        cand = ctx.propagate(st, cert_phase, dtype=jnp.int32)
+        reach = cand < jnp.iinfo(jnp.int32).max
+        is_src = jnp.arange(d.shape[0]) == source
+        ok_reached = jnp.where(reach, (d == cand) | is_src, True)
+        ok_unreached = jnp.where(reach, True, (d == _UNSEEN) | is_src)
+        return jnp.all(ok_reached & ok_unreached) & ~jnp.any(st["active"])
+
     return VertexProgram(
         name="BFS", init=init, step=step, converged=converged,
         extract=lambda st: st["depth"], weighted=False, max_iters=max_iters,
         frontier_init=lambda g: jnp.zeros((g.n_nodes,), bool)
         .at[source].set(True),
         frontier_update=lambda st: st["active"],
+        sentinels=sentinels,
+        certificate=certificate,
     )

@@ -62,9 +62,31 @@ def cc(max_iters: int = 512) -> VertexProgram:
     def converged(prev, cur):
         return jnp.all(prev["label"] == cur["label"])
 
+    # Certificate: labels are valid component ids iff (a) every label is
+    # in [0, own id] (hooking only ever takes minima of initial ids),
+    # (b) the label array is pointer-jumping-stable (label[label] ==
+    # label), and (c) both endpoints of every edge agree (the min-label
+    # reduce over the edge set returns each labelled vertex's own
+    # label).  A lost hook or corrupted label breaks (b) or (c).
+    def certificate(ctx, st):
+        lab = st["label"]
+        v = lab.shape[0]
+        nbr = ctx.propagate(st, phase, dtype=jnp.int32)
+        has_nbr = nbr < jnp.iinfo(jnp.int32).max
+        in_range = jnp.all((lab >= 0) & (lab <= jnp.arange(v)))
+        at = jnp.clip(lab, 0, v - 1)  # safe gather even when corrupted
+        root_fixed = jnp.all(lab[at] == lab)
+        edges_agree = jnp.all(jnp.where(has_nbr, nbr == lab, True))
+        return in_range & root_fixed & edges_agree
+
     return VertexProgram(
         name="CC", init=init, step=step, converged=converged,
         extract=lambda st: st["label"], weighted=False, max_iters=max_iters,
         frontier_init=lambda g: jnp.ones((g.n_nodes,), bool),
         frontier_update=lambda st: jnp.ones_like(st["label"], bool),
+        monotone={"label": "non_increasing"},
+        sentinels={"label_range": lambda p, c: jnp.all(
+            (c["label"] >= 0)
+            & (c["label"] <= jnp.arange(c["label"].shape[0])))},
+        certificate=certificate,
     )

@@ -71,6 +71,25 @@ def mis(max_iters: int = 256) -> VertexProgram:
     def converged(prev, cur):
         return ~jnp.any(cur["status"] == 0)
 
+    # Certificate: the defining MIS properties, checked with one dense
+    # O(E) max-reduce marking vertices that have an in-MIS neighbour —
+    # independence (no member has one), maximality (every removed
+    # vertex has one) and completeness (nothing undecided).
+    cert_phase = EdgePhase(
+        monoid=MAX,
+        vprop=lambda st, src, w: jnp.ones_like(src, jnp.float32),
+        spred=lambda st, src: st["status"][src] == 1,
+    )
+
+    def certificate(ctx, st):
+        s = st["status"]
+        nbr_in_mis = ctx.propagate(st, cert_phase) > 0
+        independent = ~jnp.any((s == 1) & nbr_in_mis)
+        maximal = jnp.all(jnp.where(s == 2, nbr_in_mis, True))
+        decided = ~jnp.any(s == 0)
+        valid = jnp.all((s >= 0) & (s <= 2))
+        return independent & maximal & decided & valid
+
     return VertexProgram(
         name="MIS", init=init, step=step, converged=converged,
         extract=lambda st: st["status"] == 1, weighted=False,
@@ -79,4 +98,15 @@ def mis(max_iters: int = 256) -> VertexProgram:
         frontier_update=lambda st: st["status"] == 0,
         state_pad={"status": 2},
         randomized=True,
+        # Luby rounds only ever decide vertices; decided statuses and
+        # the drawn priorities are immutable
+        sentinels={
+            "status_frozen": lambda p, c: jnp.all(jnp.where(
+                p["status"] != 0, c["status"] == p["status"], True)),
+            "status_range": lambda p, c: jnp.all(
+                (c["status"] >= 0) & (c["status"] <= 2)),
+            "priority_frozen": lambda p, c: jnp.all(
+                c["priority"] == p["priority"]),
+        },
+        certificate=certificate,
     )

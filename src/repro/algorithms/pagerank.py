@@ -78,4 +78,11 @@ def pagerank(damping: float = 0.85, tol: float = 1e-6,
         extract=lambda st: st["rank"], weighted=False, max_iters=max_iters,
         frontier_init=lambda g: jnp.ones((g.n_nodes,), bool),
         frontier_update=lambda st: st["active"],
+        # total mass is conserved at 1, so no rank can exceed it; a
+        # corrupted rank/inv_out explodes past the bound within one
+        # iteration.  No certificate: the damped iteration is an
+        # attractive fixpoint, so the convergence residual itself is
+        # the proof (perturbations are re-absorbed, not frozen in).
+        sentinels={"rank_range": lambda p, c: jnp.all(
+            (c["rank"] >= 0.0) & (c["rank"] <= 1.0 + 1e-3))},
     )

@@ -47,10 +47,37 @@ def sssp(source: int = 0, max_iters: int = 4096) -> VertexProgram:
     def converged(prev, cur):
         return ~jnp.any(cur["active"])
 
+    # Certificate: one dense O(E) relaxation over all finite-distance
+    # sources.  At a Bellman-Ford fixpoint every reached non-source
+    # vertex's distance equals min(dist[u] + w) exactly (each candidate
+    # is the same single f32 add the run performed, and MIN is an exact
+    # reduction, so the equality is bitwise); an unreached vertex with a
+    # reached neighbour, or a distance above/below the relaxation bound,
+    # fails the proof.
+    cert_phase = EdgePhase(
+        monoid=MIN,
+        vprop=lambda st, src, w: st["dist"][src] + w,
+        spred=lambda st, src: jnp.isfinite(st["dist"][src]),
+    )
+
+    def certificate(ctx, st):
+        d = st["dist"]
+        cand = ctx.propagate(st, cert_phase)
+        reach = jnp.isfinite(cand)
+        is_src = jnp.arange(d.shape[0]) == source
+        ok = jnp.where(reach, (d == cand) | is_src, jnp.isinf(d) | is_src)
+        return jnp.all(ok) & ~jnp.any(st["active"])
+
     return VertexProgram(
         name="SSSP", init=init, step=step, converged=converged,
         extract=lambda st: st["dist"], weighted=True, max_iters=max_iters,
         frontier_init=lambda g: jnp.zeros((g.n_nodes,), bool)
         .at[source].set(True),
         frontier_update=lambda st: st["active"],
+        # the MIN-monoid fixpoint only ever improves distances — the
+        # exact reorderable-combine property DRFrlx relies on
+        monotone={"dist": "non_increasing"},
+        sentinels={"dist_nonnegative":
+                   lambda p, c: jnp.all(c["dist"] >= 0.0)},
+        certificate=certificate,
     )

@@ -6,6 +6,12 @@ from repro.core.executor import (STATS, EdgeContext, ExecutorStats,
 from repro.core.batch import (BatchedEdgeContext, GraphBatch, bucket_key,
                               bucket_shape, get_graph_batch, pack_graphs)
 from repro.core.plan_cache import PLAN_CACHE, PlanCache
+from repro.core.resilience import (DEFAULT_CHECKPOINT_EVERY,
+                                   DEFAULT_RING_CAPACITY, Checkpoint,
+                                   CheckpointRing, ExecutionFault,
+                                   FaultInjector, RetryPolicy,
+                                   build_sentinels, check_certificate,
+                                   check_state_host, run_resilient)
 from repro.core.frontier import (FrontierEdges, SparseFrontier,
                                  choose_direction, dense_to_sparse,
                                  frontier_density, frontier_edges,
@@ -29,6 +35,10 @@ __all__ = [
     "BatchedEdgeContext", "GraphBatch", "bucket_key", "bucket_shape",
     "get_graph_batch", "pack_graphs",
     "PLAN_CACHE", "PlanCache",
+    "DEFAULT_CHECKPOINT_EVERY", "DEFAULT_RING_CAPACITY", "Checkpoint",
+    "CheckpointRing", "ExecutionFault", "FaultInjector", "RetryPolicy",
+    "build_sentinels", "check_certificate", "check_state_host",
+    "run_resilient",
     "FrontierEdges", "SparseFrontier",
     "choose_direction", "dense_to_sparse", "frontier_density",
     "frontier_edges", "frontier_size", "gather_frontier_edges",

@@ -625,6 +625,24 @@ class RunResult:
     #: after the last completed scheduling slice (and ``converged`` is
     #: False).  Always False for direct ``run()``/``run_batch`` runs.
     timed_out: bool = False
+    #: Structured run outcome: "converged" | "iter_limit" | "timed_out"
+    #: | "faulted".  Derived from the flags when not set explicitly;
+    #: "faulted" is produced only by the resilience layer
+    #: (:mod:`repro.core.resilience`) when recovery is exhausted.
+    outcome: Optional[str] = None
+    #: Fault record for resilient runs: the per-attempt fault history
+    #: (sentinel trips, exceptions) plus whether recovery succeeded.
+    #: None for runs that never faulted.
+    fault: Optional[dict] = None
+    #: Executions this result took: 1 for a clean run, >1 when
+    #: :class:`~repro.core.resilience.RetryPolicy` re-executed.
+    attempts: int = 1
+
+    def __post_init__(self):
+        if self.outcome is None:
+            self.outcome = ("converged" if self.converged else
+                            "timed_out" if self.timed_out else
+                            "iter_limit")
 
     @property
     def sparse_iterations(self) -> Optional[int]:
@@ -805,7 +823,10 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
         key: Optional[jax.Array] = None, max_iters: Optional[int] = None,
         use_pallas: bool = False, warmup: bool = True,
         sparse_edge_capacity: Optional[int] = None,
-        engine: str = "fused", autotune=None) -> RunResult:
+        engine: str = "fused", autotune=None,
+        checkpoint_every: int = 0, retry=None, sentinels: bool = True,
+        ring_capacity: Optional[int] = None,
+        fault_injector=None) -> RunResult:
     """Iterate ``program`` on ``graph`` under ``config`` to convergence.
 
     ``engine`` picks the convergence loop: ``"fused"`` (default) runs
@@ -822,10 +843,33 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
     persisted to ``results/autotune_cache.json`` keyed by degree
     signature, so sweeps and repeat traffic never re-tune.  Tiling is a
     performance choice only — results are unaffected.
+
+    Resilience knobs (any of them set delegates to
+    :func:`repro.core.resilience.run_resilient`, whose results are
+    bit-identical to the plain engines): ``checkpoint_every=K``
+    segments the convergence loop into K-iteration dispatches whose
+    carry snapshots into a bounded host-side checkpoint ring and whose
+    boundaries evaluate the program's invariant sentinels;
+    ``retry=RetryPolicy(...)`` rolls back to a clean checkpoint and
+    re-executes on failure, walking a degradation chain (autotuned →
+    default tiling, sparse → dense frontier, fused → host engine);
+    ``sentinels=False`` disables the sentinel battery and the
+    converged-state certificate; ``ring_capacity`` bounds the ring;
+    ``fault_injector`` is the seeded fault harness's hook
+    (:mod:`repro.testing.faults`).
     """
     if engine not in ("fused", "host"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'fused' or 'host'")
+    if checkpoint_every or retry is not None or fault_injector is not None:
+        from repro.core.resilience import run_resilient
+        return run_resilient(
+            program, graph, config, key=key, max_iters=max_iters,
+            use_pallas=use_pallas, warmup=warmup,
+            sparse_edge_capacity=sparse_edge_capacity, engine=engine,
+            autotune=autotune, checkpoint_every=checkpoint_every,
+            retry=retry, sentinels=sentinels,
+            ring_capacity=ring_capacity, fault_injector=fault_injector)
     ctx = EdgeContext.create(graph, config, use_pallas=use_pallas,
                              sparse_edge_capacity=sparse_edge_capacity,
                              autotune=autotune)

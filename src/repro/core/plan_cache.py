@@ -33,6 +33,14 @@ under the entry) and ``"batch_context"`` (a bound
 graph).  Repeat serving traffic over one graph set therefore reuses the
 pack, the bound context and — through ``"exec_fn"`` on the packed
 graph — the compiled whole-batch runner.
+
+The resilience layer (``repro.core.resilience``) adds three kinds
+anchored on the bound graph: ``"fused_seg"`` (the segmented fused
+runner — the segment end is a traced operand, so one compiled
+executable serves every checkpoint interval), ``"sentinel_eval"`` (the
+standalone jitted sentinel battery used at host-engine boundaries and
+to re-check perturbed states) and ``"certificate"`` (the O(E) fixpoint
+proof evaluated once at convergence).
 """
 from __future__ import annotations
 

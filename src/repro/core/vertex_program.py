@@ -142,6 +142,20 @@ class VertexProgram:
     draws from a PRNG key; ``run_batch`` derives decorrelated per-graph
     keys (``fold_in`` on the batch index) for such programs when the
     caller passes no explicit keys.
+
+    Resilience protocol (optional, consumed by
+    :mod:`repro.core.resilience`): ``monotone`` maps state keys to
+    ``"non_increasing"``/``"non_decreasing"`` — the exact reorderable-
+    combine property MIN/MAX-monoid fixpoints rely on, checked between
+    checkpoints (the relation is transitive, so a K-iteration segment
+    boundary check is as strong as a per-iteration one).  ``sentinels``
+    maps sentinel names to ``(prev_state, cur_state) -> bool`` invariant
+    predicates (True = healthy) written in jnp so they run both inside
+    the segmented fused dispatch and on host snapshots.  ``certificate``
+    is ``(ctx, state) -> bool``: a one-shot O(E) fixpoint proof checked
+    on *converged* states, which catches corruptions (e.g. dropped
+    updates that revert a vertex to an older-but-plausible value) that
+    boundary sentinels structurally cannot see.
     """
     name: str
     init: Callable[..., State]                     # (graph[, key]) -> state
@@ -154,6 +168,9 @@ class VertexProgram:
     frontier_update: Optional[Callable[[State], jnp.ndarray]] = None
     state_pad: Optional[dict] = None               # key -> padding fill value
     randomized: bool = False                       # init consumes a PRNG key
+    monotone: Optional[dict] = None                # key -> ordering direction
+    sentinels: Optional[dict] = None               # name -> (prev, cur) -> ok
+    certificate: Optional[Callable] = None         # (ctx, state) -> bool
 
     @property
     def properties(self) -> AlgorithmicProperties:

@@ -202,10 +202,21 @@ def validate_graph(g: Graph) -> list:
             continue  # length errors above make index checks misleading
         if rp.size and int(rp[0]) != 0:
             errors.append(f"{rp_name}[0] = {int(rp[0])} != 0")
-        if np.any(np.diff(rp) < 0) or np.any(rp < 0):
-            errors.append(f"{rp_name}: offsets not non-negative "
-                          "monotone non-decreasing")
-        elif rp.size and int(rp[-1]) != m:
+        # negative and decreasing offsets are distinct defects (a
+        # decreasing run means a *negative-length* adjacency row, the
+        # classic off-by-one CSR construction bug) — report which one
+        bad_rp = False
+        if np.any(rp < 0):
+            errors.append(f"{rp_name}: negative offsets")
+            bad_rp = True
+        if np.any(np.diff(rp) < 0):
+            drop = int(np.argmax(np.diff(rp) < 0))
+            errors.append(
+                f"{rp_name}: offsets decrease at row {drop} "
+                f"({int(rp[drop])} -> {int(rp[drop + 1])}); row offsets "
+                "must be monotone non-decreasing")
+            bad_rp = True
+        if not bad_rp and rp.size and int(rp[-1]) != m:
             errors.append(f"{rp_name}[-1] = {int(rp[-1])} != n_edges {m}")
         for name, ids in ((s_name, s), (d_name, d)):
             if ids.size and (ids.min() < 0 or ids.max() >= n):

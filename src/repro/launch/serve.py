@@ -28,6 +28,19 @@ is that front-end, built vllm-style on iteration-level scheduling:
   shared its dispatches with (inexact float-SUM programs like PR match
   ``run_batch`` bitwise and sequential ``run`` to float tolerance).
 
+- **Fault containment.**  Every slice commit is guarded by the
+  resilience layer (:mod:`repro.core.resilience`): host-side NaN /
+  monotonicity sentinels check each active slot against its pre-slice
+  state, a converged slot must additionally pass its program's
+  fixpoint certificate before retiring, and a runner exception rolls
+  the whole slice back (lane states are host-side between slices, so
+  rollback is free), retries it under :class:`~repro.core.resilience.
+  RetryPolicy`, then re-runs each surviving slot in an isolated B=1
+  batch.  Only the offending slot is quarantined — ticket outcome
+  ``"faulted"``, a structured :class:`~repro.core.resilience.
+  ExecutionFault` on :meth:`Ticket.result` — while cohabitants resume
+  from their parked state bit-identical to a solo run.
+
 - **Plan-cache warmth.**  Rosters re-enter :data:`~repro.core.
   plan_cache.PLAN_CACHE` wholesale: an unchanged roster reuses its
   packed batch (``batch_pack``), bound context (``batch_context``) and
@@ -63,8 +76,10 @@ import numpy as np
 from repro.core.batch import (BatchedEdgeContext, bucket_key,
                               get_graph_batch, run_batch_slice)
 from repro.core.config_space import SystemConfig
-from repro.core.executor import RunResult, _normalize_autotune
+from repro.core.executor import EdgeContext, RunResult, _normalize_autotune
 from repro.core.plan_cache import PLAN_CACHE
+from repro.core.resilience import (ExecutionFault, RetryPolicy,
+                                   check_certificate, check_state_host)
 from repro.core.vertex_program import VertexProgram
 from repro.graph.structure import Graph, validate_graph
 
@@ -182,11 +197,16 @@ class GatewayStats:
     converged: int = 0
     timed_out: int = 0
     cancelled: int = 0
+    faulted: int = 0
     rejected: int = 0
     backpressure_rejections: int = 0
     slices: int = 0
     roster_rebuilds: int = 0
+    slice_retries: int = 0
+    sentinel_trips: int = 0
+    quarantined: int = 0
     dispatch_seconds: float = 0.0
+    recovery_seconds: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     queue_delays_s: List[float] = dataclasses.field(default_factory=list)
     occupancy: List[float] = dataclasses.field(default_factory=list)
@@ -212,6 +232,8 @@ class GatewayStats:
             self.timed_out += 1
         elif outcome == "cancelled":
             self.cancelled += 1
+        elif outcome == "faulted":
+            self.faulted += 1
         self.last_complete_at = t.completed_at
         if outcome != "cancelled":
             self.latencies_s.append(t.completed_at - t.enqueued_at)
@@ -240,11 +262,15 @@ class GatewayStats:
             "submitted": self.submitted, "admitted": self.admitted,
             "completed": self.completed, "converged": self.converged,
             "timed_out": self.timed_out, "cancelled": self.cancelled,
-            "rejected": self.rejected,
+            "faulted": self.faulted, "rejected": self.rejected,
             "backpressure_rejections": self.backpressure_rejections,
             "slices": self.slices,
             "roster_rebuilds": self.roster_rebuilds,
+            "slice_retries": self.slice_retries,
+            "sentinel_trips": self.sentinel_trips,
+            "quarantined": self.quarantined,
             "dispatch_seconds": self.dispatch_seconds,
+            "recovery_seconds": self.recovery_seconds,
             "latency_p50_ms": ms(self._pct(lat, 50)),
             "latency_p99_ms": ms(self._pct(lat, 99)),
             "queue_delay_p50_ms": ms(self._pct(self.queue_delays_s, 50)),
@@ -352,9 +378,19 @@ class _Lane:
         return admitted
 
     # -- execution ------------------------------------------------------
-    def dispatch(self, slice_len: int, clock, stats: GatewayStats) -> bool:
+    def dispatch(self, slice_len: int, clock, stats: GatewayStats,
+                 retry: Optional[RetryPolicy] = None,
+                 sentinels: bool = True, injector=None) -> bool:
         """One fused slice over the roster; retires finished requests
-        at the slice boundary.  Returns True when work was done."""
+        at the slice boundary.  Returns True when work was done.
+
+        Lane states are host-side numpy between slices and only
+        committed after the slice's sentinel checks, so a runner
+        exception (or injected fault) rolls back for free: the failed
+        slice is retried whole under ``retry``, then slot-by-slot in
+        isolated B=1 batches, and only slots that still fail are
+        quarantined (``_quarantine``) — cohabitants never lose work.
+        """
         active = [i for i, t in enumerate(self.tickets) if t is not None]
         if not active:
             return False
@@ -362,41 +398,154 @@ class _Lane:
         for i in active:
             if self.tickets[i].first_dispatch_at is None:
                 self.tickets[i].first_dispatch_at = now
-        parked = np.asarray([t is None for t in self.tickets])
-        packed = self.batch.pack_state_host(self.states,
-                                            pad=self.program.state_pad)
-        packed = jax.tree.map(jnp.asarray, packed)
-        sl = run_batch_slice(
-            self.program, self.batch, self.bctx, packed,
-            np.asarray(self.it_b, np.int32), parked,
-            np.asarray(self.limit_b, np.int32), slice_len)
+        # pre-slice host snapshots: the rollback point AND the sentinel
+        # baseline (unpack replaces the list wholesale, so these
+        # references stay untouched by the dispatch)
+        prev = {i: self.states[i] for i in active}
+        try:
+            if injector is not None:
+                injector.before_slice([self.tickets[i].id for i in active])
+            sl = self._run_slice(slice_len)
+        except Exception:  # noqa: BLE001 — containment is the point
+            self._recover(active, prev, slice_len, clock, stats, retry,
+                          sentinels, injector)
+            return True
         self.states = self.batch.unpack_state_host(sl.state)
         stats.record_slice(len(active), len(self.roster), sl.seconds)
         now = clock()
         for i in active:
-            t = self.tickets[i]
-            adv = int(sl.advanced[i])
-            self.it_b[i] = int(sl.it_b[i])
-            t._dispatches += 1
-            if sl.dir_cols is not None:
-                t._traced = True
-                t._trace.extend("T" if b else "S"
-                                for b in sl.dir_cols[i, :adv])
-            if sl.occ_cols is not None:
-                t._occ_traced = True
-                t._occs.extend(float(o) for o in sl.occ_cols[i, :adv])
-            if t.cancelled:
-                self._retire(i, now, "cancelled", stats)
-            elif bool(sl.converged_b[i]):
-                self._retire(i, now, "converged", stats)
-            elif self.it_b[i] >= self.limit_b[i]:
-                self._retire(i, now, "iteration_limit", stats)
-            elif (t.deadline_s is not None
-                  and now >= t.enqueued_at + t.deadline_s):
-                # deadlines fire only at slice boundaries: the request
-                # keeps the partial state of its last completed slice
-                self._retire(i, now, "timed_out", stats)
+            self._commit_slot(i, i, sl, self.states[i], prev[i], now,
+                              stats, sentinels, injector)
         return True
+
+    def _run_slice(self, slice_len: int):
+        parked = np.asarray([t is None for t in self.tickets])
+        packed = self.batch.pack_state_host(self.states,
+                                            pad=self.program.state_pad)
+        packed = jax.tree.map(jnp.asarray, packed)
+        return run_batch_slice(
+            self.program, self.batch, self.bctx, packed,
+            np.asarray(self.it_b, np.int32), parked,
+            np.asarray(self.limit_b, np.int32), slice_len)
+
+    def _commit_slot(self, i: int, b: int, sl, st, prev, now: float,
+                     stats: GatewayStats, sentinels: bool,
+                     injector) -> None:
+        """Commit roster slot ``i`` from row ``b`` of slice result
+        ``sl`` — or quarantine it if a sentinel (or, at convergence,
+        the program's fixpoint certificate) rejects the new state."""
+        t = self.tickets[i]
+        if injector is not None:
+            p = injector.perturb_slot(t.id, st)
+            if p is not None:
+                st = p
+        if sentinels:
+            tripped = check_state_host(self.program, prev, st)
+            if tripped:
+                stats.sentinel_trips += 1
+                self.states[i] = prev  # keep the clean pre-slice state
+                self._quarantine(i, now, ExecutionFault("sentinel", {
+                    "ticket": t.id, "sentinels": tripped,
+                    "iteration": int(sl.it_b[b])}), stats)
+                return
+        self.states[i] = st
+        self.it_b[i] = int(sl.it_b[b])
+        adv = int(sl.advanced[b])
+        t._dispatches += 1
+        if sl.dir_cols is not None:
+            t._traced = True
+            t._trace.extend("T" if x else "S"
+                            for x in sl.dir_cols[b, :adv])
+        if sl.occ_cols is not None:
+            t._occ_traced = True
+            t._occs.extend(float(o) for o in sl.occ_cols[b, :adv])
+        if t.cancelled:
+            self._retire(i, now, "cancelled", stats)
+        elif bool(sl.converged_b[b]):
+            if sentinels and not self._certified(i):
+                stats.sentinel_trips += 1
+                self._quarantine(i, now, ExecutionFault("certificate", {
+                    "ticket": t.id, "iteration": self.it_b[i]}), stats)
+            else:
+                self._retire(i, now, "converged", stats)
+        elif self.it_b[i] >= self.limit_b[i]:
+            self._retire(i, now, "iteration_limit", stats)
+        elif (t.deadline_s is not None
+              and now >= t.enqueued_at + t.deadline_s):
+            # deadlines fire only at slice boundaries: the request
+            # keeps the partial state of its last completed slice
+            self._retire(i, now, "timed_out", stats)
+
+    def _certified(self, i: int) -> bool:
+        """Fixpoint-certificate check for a converged slot, on a solo
+        (cached) context for the slot's own graph — the O(E) proof that
+        catches dropped-update staleness no boundary sentinel can see.
+        Programs without a certificate pass vacuously."""
+        if self.program.certificate is None:
+            return True
+        ctx = EdgeContext.create(
+            self.roster[i], self.config, use_pallas=self.use_pallas,
+            sparse_edge_capacity=self.cap, autotune=self.autotune)
+        return check_certificate(self.program, ctx,
+                                 self.states[i]) is not False
+
+    def _recover(self, active: List[int], prev: Dict[int, Any],
+                 slice_len: int, clock, stats: GatewayStats,
+                 retry: Optional[RetryPolicy], sentinels: bool,
+                 injector) -> None:
+        """A slice dispatch raised: states were never committed, so
+        every active slot still holds its pre-slice host state.  Retry
+        the roster whole (``retry.max_attempts`` total tries), then
+        advance each slot alone in a B=1 batch — a slot that fails even
+        solo is quarantined with the structured error; the rest resume
+        bit-identical to a solo run."""
+        t0 = time.perf_counter()
+        stats.slice_retries += 1
+        tries = (retry.max_attempts if retry is not None else 1) - 1
+        for _ in range(tries):
+            try:
+                if injector is not None:
+                    injector.before_slice(
+                        [self.tickets[i].id for i in active])
+                sl = self._run_slice(slice_len)
+            except Exception:  # noqa: BLE001
+                stats.slice_retries += 1
+                continue
+            self.states = self.batch.unpack_state_host(sl.state)
+            stats.record_slice(len(active), len(self.roster), sl.seconds)
+            now = clock()
+            for i in active:
+                self._commit_slot(i, i, sl, self.states[i], prev[i], now,
+                                  stats, sentinels, injector)
+            stats.recovery_seconds += time.perf_counter() - t0
+            return
+        for i in active:
+            t = self.tickets[i]
+            try:
+                if injector is not None:
+                    injector.before_slice([t.id])
+                batch = get_graph_batch((self.roster[i],))
+                bctx = BatchedEdgeContext.create(
+                    batch, self.config, use_pallas=self.use_pallas,
+                    sparse_edge_capacity=self.cap, autotune=self.autotune)
+                packed = batch.pack_state_host(
+                    [self.states[i]], pad=self.program.state_pad)
+                packed = jax.tree.map(jnp.asarray, packed)
+                sl = run_batch_slice(
+                    self.program, batch, bctx, packed,
+                    np.asarray([self.it_b[i]], np.int32),
+                    np.asarray([False]),
+                    np.asarray([self.limit_b[i]], np.int32), slice_len)
+            except Exception as err:  # noqa: BLE001
+                self._quarantine(i, clock(), ExecutionFault(
+                    "slice_exception",
+                    {"ticket": t.id, "error": repr(err)}), stats)
+                continue
+            st = batch.unpack_state_host(sl.state)[0]
+            stats.record_slice(1, 1, sl.seconds)
+            self._commit_slot(i, 0, sl, st, prev[i], clock(), stats,
+                              sentinels, injector)
+        stats.recovery_seconds += time.perf_counter() - t0
 
     def _retire(self, i: int, now: float, outcome: str,
                 stats: GatewayStats) -> None:
@@ -417,6 +566,17 @@ class _Lane:
                 timed_out=(outcome == "timed_out")), None, now)
         stats.record_done(t, outcome)
 
+    def _quarantine(self, i: int, now: float, err: ExecutionFault,
+                    stats: GatewayStats) -> None:
+        """Terminal containment for one slot: free it (the roster keeps
+        the parked placeholder, so cohabitants' compiled plans survive)
+        and surface the structured fault on the ticket."""
+        t = self.tickets[i]
+        self.tickets[i] = None
+        t._finish(None, err, now)
+        stats.quarantined += 1
+        stats.record_done(t, "faulted")
+
     def pending(self) -> bool:
         return bool(self.queue) or any(t is not None for t in self.tickets)
 
@@ -436,7 +596,9 @@ class ContinuousScheduler:
     """
 
     def __init__(self, max_batch: int = 8, slice_len: int = 4,
-                 max_queue: int = 256, clock=time.monotonic):
+                 max_queue: int = 256, clock=time.monotonic,
+                 retry: Optional[RetryPolicy] = RetryPolicy(max_attempts=2),
+                 sentinels: bool = True, fault_injector=None):
         if max_batch < 1 or slice_len < 1 or max_queue < 1:
             raise ValueError("max_batch, slice_len and max_queue must "
                              "be >= 1")
@@ -444,6 +606,9 @@ class ContinuousScheduler:
         self.slice_len = int(slice_len)
         self.max_queue = int(max_queue)
         self.clock = clock
+        self.retry = retry
+        self.sentinels = bool(sentinels)
+        self.fault_injector = fault_injector
         self.stats = GatewayStats()
         self._lanes: Dict[tuple, _Lane] = {}
 
@@ -491,7 +656,9 @@ class ContinuousScheduler:
         """One scheduling round; returns how many slices dispatched."""
         for lane in self._lanes.values():
             lane.admit(self.max_batch, self.clock, self.stats)
-        return sum(lane.dispatch(self.slice_len, self.clock, self.stats)
+        return sum(lane.dispatch(self.slice_len, self.clock, self.stats,
+                                 retry=self.retry, sentinels=self.sentinels,
+                                 injector=self.fault_injector)
                    for lane in self._lanes.values())
 
     def pending(self) -> bool:
@@ -526,10 +693,14 @@ class GraphGateway:
     """
 
     def __init__(self, max_batch: int = 8, slice_len: int = 4,
-                 max_queue: int = 256, clock=time.monotonic):
+                 max_queue: int = 256, clock=time.monotonic,
+                 retry: Optional[RetryPolicy] = RetryPolicy(max_attempts=2),
+                 sentinels: bool = True, fault_injector=None):
         self._sched = ContinuousScheduler(max_batch=max_batch,
                                           slice_len=slice_len,
-                                          max_queue=max_queue, clock=clock)
+                                          max_queue=max_queue, clock=clock,
+                                          retry=retry, sentinels=sentinels,
+                                          fault_injector=fault_injector)
         self._wake = threading.Condition()
         self._stop = False
         self._thread: Optional[threading.Thread] = None

@@ -1,0 +1,13 @@
+"""Testing utilities: the seeded fault-injection harness driving the
+resilience test battery and ``benchmarks/resilience.py``."""
+from repro.testing.faults import (FAULT_MODES, BitFlipFault, CompileFault,
+                                  InjectedFault, NaNFault,
+                                  RunnerExceptionFault, SliceFaultInjector,
+                                  SliceNaNFault, SliceExceptionFault,
+                                  SparseOverflowFault, StaleUpdateFault,
+                                  make_fault)
+
+__all__ = ["FAULT_MODES", "make_fault", "InjectedFault", "NaNFault",
+           "BitFlipFault", "StaleUpdateFault", "RunnerExceptionFault",
+           "SparseOverflowFault", "CompileFault", "SliceFaultInjector",
+           "SliceNaNFault", "SliceExceptionFault"]

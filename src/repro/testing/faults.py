@@ -1,0 +1,275 @@
+"""Seeded fault injectors for the execution-core resilience layer.
+
+Each injector subclasses :class:`repro.core.resilience.FaultInjector`
+and corrupts exactly one thing, deterministically (``numpy`` Generator
+seeded per instance), at a declared point in the run:
+
+============  =========================================================
+mode          what it does
+============  =========================================================
+``nan``       overwrites a slice of the largest float state leaf with
+              NaN at a segment boundary (the classic silent-divergence
+              hazard; caught by the NaN sentinel)
+``bitflip``   XORs bit 30 into a few entries of the largest non-bool
+              state leaf (emulates a corrupted store; caught by range/
+              frozen/monotone sentinels)
+``stale``     reverts a random subset of vertices to their values at
+              the last checkpoint (emulates DRFrlx dropped updates;
+              *invisible* to boundary sentinels by construction —
+              caught by the convergence certificate, or harmlessly
+              absorbed by attractive-fixpoint programs)
+``exception`` raises :class:`InjectedFault` from the segment dispatch
+              (emulates a runner/XLA crash)
+``overflow``  forces ``sparse_edge_capacity=1`` so every sparse gather
+              overflows into the dense fallback (must be result-
+              invariant: overflow falls back, never drops edges)
+``compile``   raises from the attempt's build step while the engine
+              matches (emulates a compile failure; recovery must walk
+              the degradation chain to another engine)
+============  =========================================================
+
+``once=True`` (default for state perturbations) means a mode fires a
+single time — after a rollback the re-execution is clean, so recovery
+must converge to the fault-free answer bit for bit.
+
+Gateway-side injectors (``SliceExceptionFault``, ``SliceNaNFault``)
+target one ticket of a continuous-batching lane: the scheduler's
+recovery must quarantine only that slot.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.resilience import FaultInjector
+
+__all__ = ["InjectedFault", "NaNFault", "BitFlipFault", "StaleUpdateFault",
+           "RunnerExceptionFault", "SparseOverflowFault", "CompileFault",
+           "SliceFaultInjector", "SliceExceptionFault", "SliceNaNFault",
+           "FAULT_MODES", "make_fault"]
+
+
+class InjectedFault(RuntimeError):
+    """The exception every forced-failure injector raises — tests can
+    distinguish injected crashes from genuine bugs."""
+
+
+def _copy_state(state):
+    return {k: np.array(v, copy=True) for k, v in state.items()}
+
+
+def _array_items(state, float_only=False, skip_bool=True):
+    items = []
+    for k in sorted(state):
+        a = np.asarray(state[k])
+        if skip_bool and a.dtype == np.bool_:
+            continue
+        if float_only and not np.issubdtype(a.dtype, np.floating):
+            continue
+        items.append((k, a))
+    return items
+
+
+class NaNFault(FaultInjector):
+    """Overwrite ``fraction`` of the largest float state leaf with NaN
+    at the first segment boundary at/after ``at_iteration``."""
+
+    def __init__(self, at_iteration: int = 1, fraction: float = 0.05,
+                 seed: int = 0, once: bool = True):
+        self.at_iteration = at_iteration
+        self.fraction = fraction
+        self.once = once
+        self._rng = np.random.default_rng(seed)
+        self.fired = 0
+
+    def perturb(self, it, state, checkpoint_state):
+        if it < self.at_iteration or (self.once and self.fired):
+            return None
+        floats = _array_items(state, float_only=True)
+        if not floats:
+            return None
+        key, _ = max(floats, key=lambda kv: kv[1].size)
+        out = _copy_state(state)
+        a = out[key].reshape(-1)
+        k = max(1, int(a.size * self.fraction))
+        idx = self._rng.choice(a.size, size=min(k, a.size), replace=False)
+        a[idx] = np.nan
+        self.fired += 1
+        return out
+
+
+class BitFlipFault(FaultInjector):
+    """XOR bit 30 into ``n_flips`` random entries of the largest
+    non-bool state leaf — a corrupted store, not a plausible value."""
+
+    def __init__(self, at_iteration: int = 1, n_flips: int = 3,
+                 seed: int = 0, once: bool = True):
+        self.at_iteration = at_iteration
+        self.n_flips = n_flips
+        self.once = once
+        self._rng = np.random.default_rng(seed)
+        self.fired = 0
+
+    def perturb(self, it, state, checkpoint_state):
+        if it < self.at_iteration or (self.once and self.fired):
+            return None
+        arrays = _array_items(state)
+        if not arrays:
+            return None
+        key, _ = max(arrays, key=lambda kv: kv[1].size)
+        out = _copy_state(state)
+        a = out[key].reshape(-1)
+        idx = self._rng.choice(a.size, size=min(self.n_flips, a.size),
+                               replace=False)
+        bits = a[idx].view(np.uint32 if a.dtype.itemsize == 4
+                           else np.uint64)
+        a[idx] = (bits ^ np.array(1 << 30, bits.dtype)).view(a.dtype)
+        self.fired += 1
+        return out
+
+
+class StaleUpdateFault(FaultInjector):
+    """Revert ``fraction`` of the vertices to their last-checkpoint
+    values across every per-vertex leaf — the DRFrlx dropped-update
+    hazard.  The reverted values equal the checkpoint's, so boundary
+    sentinels structurally cannot see this; only the convergence
+    certificate (or an attractive fixpoint re-absorbing it) can."""
+
+    def __init__(self, at_iteration: int = 1, fraction: float = 0.25,
+                 seed: int = 0, once: bool = True):
+        self.at_iteration = at_iteration
+        self.fraction = fraction
+        self.once = once
+        self._rng = np.random.default_rng(seed)
+        self.fired = 0
+
+    def perturb(self, it, state, checkpoint_state):
+        if it < self.at_iteration or (self.once and self.fired):
+            return None
+        dims = [np.asarray(v).shape[0] for v in state.values()
+                if np.asarray(v).ndim >= 1]
+        if not dims:
+            return None
+        v = max(dims)
+        rows = self._rng.choice(v, size=max(1, int(v * self.fraction)),
+                                replace=False)
+        out = _copy_state(state)
+        for k in out:
+            cur, old = out[k], np.asarray(checkpoint_state[k])
+            if cur.ndim >= 1 and cur.shape[0] == v:
+                cur[rows] = old[rows]
+        self.fired += 1
+        return out
+
+
+class RunnerExceptionFault(FaultInjector):
+    """Raise :class:`InjectedFault` before the segment dispatch at/after
+    ``at_iteration`` (``times=None`` keeps failing every segment)."""
+
+    def __init__(self, at_iteration: int = 0, times: Optional[int] = 1):
+        self.at_iteration = at_iteration
+        self.times = times
+        self.fired = 0
+
+    def before_segment(self, it):
+        if it < self.at_iteration:
+            return
+        if self.times is not None and self.fired >= self.times:
+            return
+        self.fired += 1
+        raise InjectedFault(f"injected runner exception at iteration {it}")
+
+
+class SparseOverflowFault(FaultInjector):
+    """Force a one-edge sparse gather capacity: every sparse iteration
+    overflows and must take the dense fallback — results must be
+    unchanged (the overflow path is the first rung of the degradation
+    story and predates this PR)."""
+    knob_overrides = {"sparse_edge_capacity": 1}
+
+
+class CompileFault(FaultInjector):
+    """Fail the attempt's build step while the engine matches
+    ``engine`` — recovery must degrade to a different engine."""
+
+    def __init__(self, engine: str = "fused"):
+        self.engine = engine
+        self.fired = 0
+
+    def on_compile(self, knobs):
+        if knobs.get("engine") == self.engine:
+            self.fired += 1
+            raise InjectedFault(
+                f"injected compile failure for engine={self.engine!r}")
+
+
+# ----------------------------------------------------------------------
+# gateway-side (continuous-batching slice) injectors
+
+
+class SliceFaultInjector(FaultInjector):
+    """Marker base for injectors targeting gateway slices."""
+
+
+class SliceExceptionFault(SliceFaultInjector):
+    """Fail every slice dispatch whose roster contains ``ticket_id``
+    (including the solo isolation retry — the slot can only be
+    quarantined).  With ``ticket_id=None``, fail the first ``times``
+    slice dispatches outright."""
+
+    def __init__(self, ticket_id: Optional[str] = None,
+                 times: Optional[int] = None):
+        self.ticket_id = ticket_id
+        self.times = times
+        self.fired = 0
+
+    def before_slice(self, ticket_ids: List[str]):
+        if self.ticket_id is not None and self.ticket_id not in ticket_ids:
+            return
+        if self.times is not None and self.fired >= self.times:
+            return
+        self.fired += 1
+        raise InjectedFault(
+            f"injected slice failure (tickets={ticket_ids})")
+
+
+class SliceNaNFault(SliceFaultInjector):
+    """Corrupt one ticket's unpacked state with NaN after a slice —
+    the per-slot sentinel check must quarantine exactly that slot."""
+
+    def __init__(self, ticket_id: str, once: bool = True):
+        self.ticket_id = ticket_id
+        self.once = once
+        self.fired = 0
+
+    def perturb_slot(self, ticket_id, state):
+        if ticket_id != self.ticket_id or (self.once and self.fired):
+            return None
+        floats = _array_items(state, float_only=True)
+        if not floats:
+            return None
+        key, _ = max(floats, key=lambda kv: kv[1].size)
+        out = _copy_state(state)
+        out[key].reshape(-1)[:1] = np.nan
+        self.fired += 1
+        return out
+
+
+#: mode name -> injector factory (the fault-matrix test iterates this)
+FAULT_MODES = {
+    "nan": NaNFault,
+    "bitflip": BitFlipFault,
+    "stale": StaleUpdateFault,
+    "exception": RunnerExceptionFault,
+    "overflow": SparseOverflowFault,
+    "compile": CompileFault,
+}
+
+
+def make_fault(mode: str, **kwargs) -> FaultInjector:
+    """Instantiate one of :data:`FAULT_MODES` by name."""
+    if mode not in FAULT_MODES:
+        raise ValueError(f"unknown fault mode {mode!r}; "
+                         f"expected one of {sorted(FAULT_MODES)}")
+    return FAULT_MODES[mode](**kwargs)

@@ -50,6 +50,18 @@ def _autotune_artifact(speedup=1.3):
     }
 
 
+def _resilience_artifact(efficiency=0.97, identical=True, recovery=1.3):
+    return {
+        "workload": {"generator": "rmat", "scale": 10, "seed": 7},
+        "smoke": True,
+        "checkpoint_every": 32,
+        "configs": {c: {"efficiency": efficiency,
+                        "bit_identical": identical}
+                    for c in ("TG0", "DG1")},
+        "recovery": {"recovery_speedup": recovery},
+    }
+
+
 def _matrix_artifact(gain=1.4, source="synthetic"):
     return {
         "smoke": True,
@@ -123,6 +135,26 @@ class TestExtractAndCompare:
         assert compare_artifact("autotune", _autotune_artifact(),
                                 cur)["status"] == "incompatible"
 
+    def test_resilience_caps_and_bit_identity(self):
+        """Healthy efficiencies saturate the cap (run-to-run reads
+        exactly 1.0); a config losing bit-identity is an unmissable
+        regression; a moved checkpoint interval refuses to diff."""
+        base = _resilience_artifact(efficiency=0.98, recovery=1.4)
+        cur = _resilience_artifact(efficiency=0.93, recovery=1.2)
+        rep = compare_artifact("resilience", base, cur)
+        assert rep["status"] == "ok"   # both above the caps -> 1.0
+        assert rep["geomean_ratio"] == pytest.approx(1.0)
+        m = extract_metrics("resilience", base)
+        assert m["resilience/TG0/efficiency"] == pytest.approx(0.90)
+        assert m["resilience/recovery/speedup"] == pytest.approx(1.1)
+        broken = _resilience_artifact(identical=False)
+        assert compare_artifact("resilience", base,
+                                broken)["status"] == "regression"
+        moved = _resilience_artifact()
+        moved["checkpoint_every"] = 8
+        assert compare_artifact("resilience", base,
+                                moved)["status"] == "incompatible"
+
     def test_matrix_gain_regression_and_input_source_pinning(self):
         base = _matrix_artifact(gain=1.4)
         rep = compare_artifact("matrix", base,
@@ -151,6 +183,20 @@ class TestCompareDirs:
         # inject a 2x regression across the board -> exit 1
         self._write(cur, "dispatch", _dispatch_artifact(0.75))
         assert compare_dirs(base, cur, ["dispatch"]) == 1
+
+    def test_failure_message_names_artifact_metric_and_values(
+            self, tmp_path, capsys):
+        """A FAIL line must say *what* regressed: artifact kind, metric
+        name, and measured-vs-baseline values — enough to act on from
+        the CI log alone."""
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(base, "dispatch", _dispatch_artifact(1.5))
+        self._write(cur, "dispatch", _dispatch_artifact(0.75))
+        assert compare_dirs(base, cur, ["dispatch"]) == 1
+        out = capsys.readouterr().out
+        assert "worst [dispatch]: dispatch/SG0/fused_speedup" in out
+        assert "measured 0.75 vs baseline 1.5" in out
+        assert "+100.0% regression" in out
 
     def test_missing_baseline_fails_unless_allowed(self, tmp_path):
         base, cur = tmp_path / "baselines", tmp_path / "results"

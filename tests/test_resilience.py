@@ -1,0 +1,273 @@
+"""Execution-core resilience (repro.core.resilience).
+
+The contract under test, from ISSUE-8's acceptance gate:
+
+1. **Checkpointing is free of semantic cost** — ``run(...,
+   checkpoint_every=K)`` is bit-identical to the unsegmented engine
+   (state, iteration count, direction/occupancy traces) for any K, on
+   both engines, across design-space configs.
+2. **Every injected fault ends well** — for the full seeded fault
+   matrix (mode x engine x app), a run either converges to the clean
+   answer (recovered, or the fault was harmlessly absorbed /
+   result-invariant) or surfaces a structured ``outcome="faulted"``
+   result carrying the fault history.  It never returns a silently
+   wrong answer.
+3. **Bounded rollback works** — the :class:`CheckpointRing` pins the
+   initial snapshot, keeps the newest ``capacity-1`` boundaries, and
+   ``rollback`` clamps at the pinned snapshot.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+
+from repro.algorithms import REGISTRY
+from repro.core import ALL_CONFIGS, SystemConfig, run
+from repro.core.resilience import (Checkpoint, CheckpointRing, RetryPolicy,
+                                   build_sentinels, check_state_host)
+from repro.core.vertex_program import FRONTIER_DIR_KEY, FRONTIER_OCC_KEY
+from repro.graph import rmat_graph
+from repro.testing.faults import (FAULT_MODES, CompileFault, NaNFault,
+                                  RunnerExceptionFault, StaleUpdateFault,
+                                  make_fault)
+
+CFG = SystemConfig.from_name("DG1")
+APPS = ("BFS", "PR", "MIS")
+ENGINES = ("fused", "host")
+RETRY = RetryPolicy(max_attempts=6)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(scale=6, edge_factor=8, seed=3, weighted=False)
+
+
+@pytest.fixture(scope="module")
+def clean(graph):
+    """Reference results per (app, engine) — what recovery must match."""
+    return {(a, e): run(REGISTRY[a](), graph, CFG, engine=e)
+            for a in APPS for e in ENGINES}
+
+
+#: per-iteration frontier bookkeeping (last direction / occupancy
+#: scalar), not part of the algorithm's answer — it legitimately
+#: differs when recovery replays from a rollback, degrades the engine,
+#: or a knob override changes the sparse capacity
+_FRONTIER_KEYS = {FRONTIER_DIR_KEY, FRONTIER_OCC_KEY}
+
+
+def _assert_states_match(res_state, ref_state, exact: bool,
+                         frontier: bool = True):
+    for k in ref_state:
+        if not frontier and k in _FRONTIER_KEYS:
+            continue
+        a, b = np.asarray(res_state[k]), np.asarray(ref_state[k])
+        if a.dtype.kind == "f" and not exact:
+            assert np.allclose(a, b, atol=1e-5, equal_nan=False), k
+        else:
+            assert np.array_equal(a, b), k
+
+
+class TestCheckpointedBitIdentity:
+    """Segmenting the loop never changes the math."""
+
+    # every 3rd design-space cell: static/topology/dynamic, both
+    # granularities — the benchmark covers the full 18 in CI
+    CONFIGS = [c.name for c in ALL_CONFIGS][::3]
+
+    @pytest.mark.parametrize("cfg", CONFIGS)
+    @pytest.mark.parametrize("app", ["BFS", "PR"])
+    def test_fused_checkpointed_matches_plain(self, graph, app, cfg):
+        prog = REGISTRY[app]()
+        config = SystemConfig.from_name(cfg)
+        plain = run(prog, graph, config)
+        ckpt = run(prog, graph, config, checkpoint_every=4)
+        assert ckpt.converged and ckpt.iterations == plain.iterations
+        assert ckpt.outcome == "converged" and ckpt.fault is None
+        _assert_states_match(ckpt.state, plain.state, exact=True)
+        assert ckpt.direction_trace == plain.direction_trace
+        assert ckpt.occupancy_trace == plain.occupancy_trace
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_checkpoint_interval_never_changes_result(self, graph, engine):
+        prog = REGISTRY["BFS"]()
+        ref = run(prog, graph, CFG, engine=engine)
+        for k in (1, 3, 1000):
+            r = run(prog, graph, CFG, engine=engine, checkpoint_every=k)
+            assert r.iterations == ref.iterations
+            _assert_states_match(r.state, ref.state, exact=True)
+            assert r.direction_trace == ref.direction_trace
+
+    def test_iter_limit_outcome_is_structured(self, graph):
+        prog = REGISTRY["PR"]()
+        r = run(prog, graph, CFG, checkpoint_every=2, max_iters=3)
+        assert not r.converged and r.outcome == "iter_limit"
+        plain = run(prog, graph, CFG, max_iters=3)
+        assert plain.outcome == "iter_limit"     # plain runs report too
+        _assert_states_match(r.state, plain.state, exact=True)
+
+
+class TestFaultMatrix:
+    """Every fault mode x engine x app: recover to the clean answer or
+    report a structured fault — never a silently wrong result."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("app", APPS)
+    @pytest.mark.parametrize("mode", sorted(FAULT_MODES))
+    def test_fault_recovers_or_reports(self, graph, clean, mode, app,
+                                       engine):
+        prog = REGISTRY[app]()
+        inj = make_fault(mode)
+        res = run(prog, graph, CFG, engine=engine, checkpoint_every=2,
+                  retry=RETRY, fault_injector=inj)
+        if res.outcome == "faulted":
+            # structured failure: history + final cause, never a state
+            # that pretends to be an answer
+            assert not res.converged
+            assert res.fault["recovered"] is False
+            assert res.fault["history"]
+            assert res.fault["final"]["kind"] in ("sentinel", "exception")
+            return
+        assert res.converged and res.outcome == "converged"
+        ref = clean[(app, res.engine)]
+        if res.fault is None:
+            # the injector never tripped anything: either it could not
+            # fire (e.g. compile-fault on the host engine), it was
+            # result-invariant (overflow falls back densely), or the
+            # fixpoint absorbed it (stale on PR) — the answer must
+            # still match the clean run
+            _assert_states_match(res.state, ref.state, exact=False,
+                                 frontier=False)
+        else:
+            assert res.fault["recovered"] is True
+            assert res.attempts > 1
+            # recovery re-executes clean: exact for integer fixpoints,
+            # float-tolerant when the degradation chain switched
+            # engines mid-run (FMA contraction differs per engine)
+            _assert_states_match(res.state, ref.state, exact=False,
+                                 frontier=False)
+            if all(np.asarray(v).dtype.kind != "f"
+                   for k, v in ref.state.items()
+                   if k not in _FRONTIER_KEYS):
+                _assert_states_match(res.state, ref.state, exact=True,
+                                     frontier=False)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_persistent_exception_is_faulted_not_wrong(self, graph,
+                                                       engine):
+        inj = RunnerExceptionFault(at_iteration=0, times=None)
+        res = run(REGISTRY["BFS"](), graph, CFG, engine=engine,
+                  checkpoint_every=2, retry=RetryPolicy(max_attempts=3),
+                  fault_injector=inj)
+        assert res.outcome == "faulted" and not res.converged
+        assert len(res.fault["history"]) == 3
+        assert res.fault["final"]["kind"] == "exception"
+        assert res.iterations == 0               # never got past it=0
+
+    def test_nan_without_retry_is_faulted_with_sentinel_detail(self,
+                                                               graph):
+        res = run(REGISTRY["PR"](), graph, CFG, checkpoint_every=2,
+                  fault_injector=NaNFault(at_iteration=2))
+        assert res.outcome == "faulted"
+        final = res.fault["final"]
+        assert final["kind"] == "sentinel"
+        assert "nan" in final["sentinels"]
+        assert final["engine"] == "fused"
+
+    def test_nan_recovery_is_bit_identical(self, graph, clean):
+        res = run(REGISTRY["PR"](), graph, CFG, checkpoint_every=2,
+                  retry=RETRY, fault_injector=NaNFault(at_iteration=2))
+        assert res.converged and res.fault["recovered"]
+        # once=True: the re-execution is clean and stays on the fused
+        # engine (rung 0 retries as-is), so the match is bitwise
+        assert res.engine == "fused"
+        _assert_states_match(res.state, clean[("PR", "fused")].state,
+                             exact=True)
+
+    def test_stale_fault_caught_by_certificate(self, graph, clean):
+        """A dropped update is invisible to every boundary sentinel by
+        construction; only the convergence certificate can reject it.
+        Firing on the *final* segment boundary (clean BFS converges at
+        it=4 here, so at_iteration=3 hits the done-boundary) leaves a
+        quiescent-but-wrong state that no later frontier can heal —
+        earlier reverts are re-relaxed by subsequent iterations."""
+        prog = REGISTRY["BFS"]()
+        inj = StaleUpdateFault(at_iteration=3, fraction=0.5)
+        res = run(prog, graph, CFG, checkpoint_every=2, retry=RETRY,
+                  fault_injector=inj)
+        assert res.converged and res.fault["recovered"]
+        assert any(f["kind"] == "sentinel"
+                   and "certificate" in f.get("sentinels", ())
+                   for f in res.fault["history"])
+        _assert_states_match(res.state, clean[("BFS", res.engine)].state,
+                             exact=True, frontier=False)
+
+    def test_compile_fault_degrades_to_host_engine(self, graph, clean):
+        res = run(REGISTRY["BFS"](), graph, CFG, checkpoint_every=2,
+                  retry=RETRY, fault_injector=CompileFault(engine="fused"))
+        assert res.converged and res.engine == "host"
+        assert res.fault["recovered"]
+        _assert_states_match(res.state, clean[("BFS", "host")].state,
+                             exact=True, frontier=False)
+
+
+class TestCheckpointRing:
+    def _cp(self, it):
+        return Checkpoint(it=it, done=False, state={"x": np.arange(3)},
+                          dir_buf=None, occ_buf=None)
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            CheckpointRing(0)
+
+    def test_pinned_first_survives_wraparound(self):
+        ring = CheckpointRing(capacity=3)
+        for it in range(10):
+            ring.push(self._cp(it))
+        assert len(ring) == 3                    # pinned + 2 newest
+        assert ring.latest().it == 9
+        assert ring.rollback(1).it == 8
+        # deeper rollbacks clamp at the pinned initial snapshot
+        assert ring.rollback(50).it == 0
+
+    def test_capacity_one_is_cold_restart(self):
+        ring = CheckpointRing(capacity=1)
+        for it in range(5):
+            ring.push(self._cp(it))
+        assert len(ring) == 1
+        assert ring.latest().it == 0
+
+    def test_empty_ring_raises(self):
+        with pytest.raises(IndexError):
+            CheckpointRing().latest()
+
+
+class TestSentinelBattery:
+    def test_battery_order_and_contents(self):
+        names = [n for n, _ in build_sentinels(REGISTRY["SSSP"]())]
+        assert names[0] == "nan"
+        assert "monotone:dist" in names
+        assert "dist_nonnegative" in names
+
+    def test_host_checks_catch_nan_and_monotone(self):
+        prog = REGISTRY["SSSP"]()
+        prev = {"dist": np.asarray([0.0, 2.0, np.inf], np.float32)}
+        ok = {"dist": np.asarray([0.0, 1.5, np.inf], np.float32)}
+        assert check_state_host(prog, prev, ok) == []
+        nan = {"dist": np.asarray([0.0, np.nan, np.inf], np.float32)}
+        assert "nan" in check_state_host(prog, prev, nan)
+        worse = {"dist": np.asarray([0.0, 3.0, np.inf], np.float32)}
+        assert "monotone:dist" in check_state_host(prog, prev, worse)
+
+    def test_validation_errors(self, graph):
+        prog = REGISTRY["BFS"]()
+        with pytest.raises(ValueError):
+            run(prog, graph, CFG, checkpoint_every=-1)
+        with pytest.raises(ValueError):
+            run(prog, graph, CFG, checkpoint_every=2,
+                retry=RetryPolicy(max_attempts=0))

@@ -11,6 +11,12 @@ state a sequential ``run(max_iters=...)`` of the completed iterations
 produces — while batch-mates still converge bit-identically; (4)
 bounded-queue backpressure rejects excess arrivals without losing
 accepted work.
+
+The ISSUE-8 extension adds mid-flight execution faults: an injected
+NaN or runner exception inside a packed slice must quarantine *only*
+the offending slot (structured :class:`ExecutionFault` on
+``Ticket.result()``, outcome ``"faulted"`` in the stats) while every
+cohabitant resumes from its parked state bit-identical to a solo run.
 """
 import dataclasses
 
@@ -19,10 +25,12 @@ import pytest
 
 from repro.algorithms import REGISTRY
 from repro.core import SystemConfig, run
+from repro.core.resilience import ExecutionFault
 from repro.graph import grid_graph, rmat_graph
 from repro.graph.structure import validate_graph
 from repro.launch.serve import (AdmissionError, CancelledError,
                                 ContinuousScheduler, GatewayBackpressure)
+from repro.testing.faults import SliceExceptionFault, SliceNaNFault
 
 CFG = SystemConfig.from_name("DG1")
 
@@ -61,7 +69,14 @@ def _short_degree(g):
     return _corrupt(g, out_degree=np.asarray(g.out_degree)[:-1])
 
 
+def _decreasing_offsets(g):
+    rp = np.asarray(g.row_ptr_out).copy()
+    rp[2] = rp[3] + 1                        # non-negative but decreasing
+    return _corrupt(g, row_ptr_out=rp)
+
+
 FAULTS = {"negative_offsets": _neg_offsets,
+          "decreasing_offsets": _decreasing_offsets,
           "dangling_edge": _dangling_edge,
           "nan_weights": _nan_weights,
           "length_mismatch": _short_degree}
@@ -84,6 +99,17 @@ class TestAdmissionRejection:
 
     def test_valid_graph_passes_validator(self, good_pair):
         assert validate_graph(good_pair[0]) == []
+
+    def test_negative_and_decreasing_offsets_reported_distinctly(
+            self, good_pair):
+        """The two CSR offset defects get their own messages: a negative
+        entry vs a decreasing run (a negative-length adjacency row),
+        the latter naming the offending row."""
+        neg = validate_graph(_neg_offsets(good_pair[0]))
+        assert any("negative offsets" in e for e in neg), neg
+        dec = validate_graph(_decreasing_offsets(good_pair[0]))
+        assert any("decrease at row 2" in e for e in dec), dec
+        assert not any("negative offsets" in e for e in dec), dec
 
     def test_rejection_never_poisons_in_flight_batch(self, good_pair):
         """A malformed arrival mid-stream leaves the already-admitted
@@ -210,3 +236,103 @@ class TestBackpressure:
         for k in seq.state:
             assert np.array_equal(np.asarray(res.state[k]),
                                   np.asarray(seq.state[k])), k
+
+
+class TestExecutionFaults:
+    """ISSUE-8: mid-flight faults are contained to the offending slot."""
+
+    def _pool(self):
+        return [rmat_graph(5, 8, seed=s, weighted=False)
+                for s in (1, 2, 3, 4)]
+
+    def _check_cohabitants(self, prog, pool, tickets, skip, exact=True):
+        for j, (g, t) in enumerate(zip(pool, tickets)):
+            if j == skip:
+                continue
+            res = t.result(timeout=1)
+            solo = run(prog, g, CFG)
+            assert res.converged and res.iterations == solo.iterations, j
+            for k in solo.state:
+                a = np.asarray(res.state[k])
+                b = np.asarray(solo.state[k])
+                if exact or a.dtype.kind != "f":
+                    assert np.array_equal(a, b), (j, k)
+                else:
+                    assert np.allclose(a, b, atol=1e-6), (j, k)
+
+    def test_nan_slot_quarantined_cohabitants_bit_identical(self):
+        """A NaN injected into one PR slot trips the per-slice sentinel:
+        that ticket alone raises a structured ExecutionFault and every
+        cohabitant's result stays bit-identical to the in-batch run."""
+        prog = REGISTRY["PR"]()
+        pool = self._pool()
+        sched = ContinuousScheduler(max_batch=4, slice_len=3)
+        tickets = [sched.submit(prog, g, CFG) for g in pool]
+        sched.fault_injector = SliceNaNFault(ticket_id=tickets[1].id)
+        sched.run_until_idle()
+        with pytest.raises(ExecutionFault) as exc:
+            tickets[1].result(timeout=1)
+        assert exc.value.code == "sentinel"
+        assert "nan" in exc.value.detail["sentinels"]
+        clean = ContinuousScheduler(max_batch=4, slice_len=3)
+        ref = [clean.submit(prog, g, CFG) for g in pool]
+        clean.run_until_idle()
+        for j in (0, 2, 3):
+            a = tickets[j].result(timeout=1)
+            b = ref[j].result(timeout=1)
+            assert a.iterations == b.iterations
+            assert np.array_equal(np.asarray(a.state["rank"]),
+                                  np.asarray(b.state["rank"])), j
+        s = sched.stats
+        assert s.quarantined == 1 and s.faulted == 1
+        assert s.sentinel_trips == 1
+        assert s.completed == len(pool)      # faulted is terminal too
+
+    def test_transient_slice_exception_is_retried(self):
+        """One injected dispatch failure: the slice retries whole under
+        the default RetryPolicy and every request still converges
+        bit-identical to solo — no quarantine, retry counted."""
+        prog = REGISTRY["BFS"]()
+        pool = self._pool()
+        sched = ContinuousScheduler(
+            max_batch=4, slice_len=3,
+            fault_injector=SliceExceptionFault(times=1))
+        tickets = [sched.submit(prog, g, CFG) for g in pool]
+        sched.run_until_idle()
+        self._check_cohabitants(prog, pool, tickets, skip=None)
+        s = sched.stats
+        assert s.slice_retries >= 1 and s.quarantined == 0
+        assert s.recovery_seconds > 0
+
+    def test_persistent_fault_isolated_to_one_slot(self):
+        """An exception that follows one ticket through the roster *and*
+        the retry forces solo isolation: the offender is quarantined
+        with a structured error, cohabitants finish bit-identical."""
+        prog = REGISTRY["BFS"]()
+        pool = self._pool()
+        sched = ContinuousScheduler(max_batch=4, slice_len=3)
+        tickets = [sched.submit(prog, g, CFG) for g in pool]
+        sched.fault_injector = SliceExceptionFault(ticket_id=tickets[2].id)
+        sched.run_until_idle()
+        with pytest.raises(ExecutionFault) as exc:
+            tickets[2].result(timeout=1)
+        assert exc.value.code == "slice_exception"
+        assert "ticket" in exc.value.detail
+        self._check_cohabitants(prog, pool, tickets, skip=2)
+        s = sched.stats
+        assert s.quarantined == 1 and s.faulted == 1
+        assert s.slice_retries >= 1
+
+    def test_empty_snapshot_schema_is_none_safe(self):
+        """snapshot() at zero completed requests: every schema key is
+        present, counters are zero, and the percentile/throughput
+        summaries are None rather than raising on empty samples."""
+        snap = ContinuousScheduler().stats.snapshot()
+        for key in ("faulted", "quarantined", "slice_retries",
+                    "sentinel_trips", "recovery_seconds"):
+            assert snap[key] == 0, key
+        for key in ("latency_p50_ms", "latency_p99_ms",
+                    "queue_delay_p50_ms", "mean_occupancy",
+                    "throughput_rps"):
+            assert snap[key] is None, key
+        assert snap["completed"] == 0 and snap["submitted"] == 0
