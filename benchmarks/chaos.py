@@ -1,0 +1,296 @@
+"""Chaos benchmark: kill-and-restart durability, tracked as
+``results/BENCH_chaos.json``.
+
+PR 8's resilience benchmark measures *in-process* recovery (a fault
+healed inside one surviving process).  This harness measures the
+crash-durability layer: the process itself dies — via
+:class:`~repro.testing.faults.SimulatedProcessDeath`, a
+``BaseException`` that no in-process retry net can catch — and a fresh
+"process" must resume from what reached disk.  Three scenarios, all
+seeded and deterministic:
+
+1. **Core kill → resume** (``checkpoint_dir``): a long PR run is
+   killed at the worst moment (``point="after_segment"``: a segment
+   executed but its boundary checkpoint never persisted), then resumed
+   from the on-disk :class:`~repro.core.durability.CheckpointStore`.
+   Measured: recovery seconds, the **lost-work ratio** (iterations
+   replayed / total — the killed segment must be replayed, everything
+   older must not), and bit-identity of the resumed final state
+   against an uninterrupted run.
+
+2. **Gateway kill → journal recovery**: a journaled gateway serving a
+   mixed stream (BFS / SSSP / CC — exact MIN-monoid apps, so
+   bit-identity holds across arbitrary cohort changes) is killed
+   mid-stream; a fresh scheduler replays the write-ahead journal
+   (:meth:`~repro.launch.serve.ContinuousScheduler.recover`),
+   re-admits every unfinished ticket from its newest persisted slice
+   boundary and drives them to convergence.  Measured: recovery
+   seconds, lost-work ratio across the recovered ticket set, and
+   per-app end-state bit-identity against the uninterrupted gateway.
+
+3. **Overload shedding at 2× capacity**: after a warm-up wave teaches
+   the gateway its service time, a burst of deadline-carrying
+   requests at twice the roster capacity hits ``submit``.  The
+   projection must shed the requests whose deadline is already
+   hopeless (structured ``OverloadError``) while every *admitted*
+   request still completes — overload degrades admission, never
+   correctness.
+
+The CI gate (benchmarks/compare.py) tracks bit-identity (1.0 vs 1e-6 —
+any loss is unmissable), lost-work containment (< 1.0: warm
+checkpoints beat cold restart) and overload containment; recovery
+seconds are recorded for trend-watching but not gated (wall-clock
+noise).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+from tempfile import TemporaryDirectory
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))          # `benchmarks` package
+sys.path.insert(0, str(_ROOT / "src"))  # `repro` package
+
+import numpy as np
+
+from benchmarks.dispatch import PINNED_WORKLOAD
+from repro.algorithms import REGISTRY
+from repro.core import SystemConfig, run
+from repro.core.durability import CheckpointStore
+from repro.graph import rmat_batch, rmat_graph
+from repro.launch.serve import ContinuousScheduler, OverloadError
+from repro.testing.faults import (GatewayKillFault, ProcessKillFault,
+                                  SimulatedProcessDeath)
+
+__all__ = ["run_chaos_bench"]
+
+CORE_APP = "PR"          # longest pinned convergence: the kill lands
+                         # deep enough that cold restart is expensive
+CORE_K = 4
+GATEWAY_APPS = ("BFS", "SSSP", "CC")   # exact MIN-monoid: bit-identity
+                                       # holds across cohort changes
+SMOKE_SCALE = 9
+GATEWAY_SCALE = 6
+GATEWAY_POOL = 3
+GATEWAY_REQUESTS = 6
+KILL_AFTER_SLICES = 2
+
+
+def _states_equal(a, b) -> bool:
+    keys = sorted(a) if isinstance(a, dict) else None
+    for k in (keys or []):
+        if not np.array_equal(np.asarray(a[k]), np.asarray(b[k])):
+            return False
+    return True
+
+
+# ----------------------------------------------------------------------
+def _core_chaos(smoke: bool) -> dict:
+    wl = dict(PINNED_WORKLOAD)
+    if smoke:
+        wl["scale"] = SMOKE_SCALE
+    program = REGISTRY[CORE_APP]()
+    g = rmat_graph(weighted=program.weighted, **wl)
+    config = SystemConfig.from_name("DG1")
+
+    clean = run(program, g, config, checkpoint_every=CORE_K)
+    total = clean.iterations
+    kill_at = max(CORE_K, total - CORE_K)
+
+    with TemporaryDirectory() as d:
+        killed_it = 0
+        try:
+            run(program, g, config, checkpoint_every=CORE_K,
+                checkpoint_dir=d,
+                fault_injector=ProcessKillFault(at_iteration=kill_at,
+                                                point="after_segment"))
+            raise RuntimeError("kill injector never fired")
+        except SimulatedProcessDeath:
+            pass
+        # what the dead process knew vs what reached disk: the killed
+        # segment's end iteration minus the newest persisted boundary
+        # is exactly the work that must be replayed
+        cp, _ = CheckpointStore(d).load_latest()
+        resume_it = cp.it if cp is not None else 0
+        killed_it = min(resume_it + CORE_K, total)
+        t0 = time.perf_counter()
+        resumed = run(program, g, config, checkpoint_every=CORE_K,
+                      checkpoint_dir=d)
+        recovery_seconds = time.perf_counter() - t0
+
+    replayed = killed_it - resume_it
+    return {
+        "app": CORE_APP, "checkpoint_every": CORE_K,
+        "total_iterations": int(total), "kill_at": int(killed_it),
+        "resume_iteration": int(resume_it),
+        "replayed_iterations": int(replayed),
+        "lost_work_ratio": replayed / max(total, 1),
+        "cold_restart_ratio": killed_it / max(total, 1),
+        "recovery_seconds": recovery_seconds,
+        "bit_identical": _states_equal(clean.state, resumed.state),
+        "converged": bool(resumed.converged),
+    }
+
+
+# ----------------------------------------------------------------------
+def _gateway_chaos(smoke: bool) -> dict:
+    scale = GATEWAY_SCALE if smoke else GATEWAY_SCALE + 2
+    pool = rmat_batch(GATEWAY_POOL, scale, seed=7)
+    apps = {}
+    total_replayed = 0
+    total_killed = 0
+    total_iters = 0
+    recovery_seconds = 0.0
+    for app in GATEWAY_APPS:
+        program = REGISTRY[app]()
+        config = SystemConfig.from_name("DG1")
+
+        ref = ContinuousScheduler(max_batch=4, slice_len=2)
+        ref_tickets = [ref.submit(program, pool[i % GATEWAY_POOL], config)
+                       for i in range(GATEWAY_REQUESTS)]
+        ref.run_until_idle()
+        ref_results = [t.result(0) for t in ref_tickets]
+
+        with TemporaryDirectory() as d:
+            sched = ContinuousScheduler(
+                max_batch=4, slice_len=2, journal_dir=d,
+                fault_injector=GatewayKillFault(
+                    after_slices=KILL_AFTER_SLICES))
+            tickets = [sched.submit(program, pool[i % GATEWAY_POOL],
+                                    config)
+                       for i in range(GATEWAY_REQUESTS)]
+            try:
+                sched.run_until_idle()
+                raise RuntimeError("gateway kill never fired")
+            except SimulatedProcessDeath:
+                pass
+            # progress the dead gateway had made (committed boundaries)
+            killed_it = {}
+            for lane in sched._lanes.values():
+                for i, t in enumerate(lane.tickets):
+                    if t is not None:
+                        killed_it[t.jid] = lane.it_b[i]
+                for t in lane.queue:
+                    killed_it[t.jid] = 0
+
+            t0 = time.perf_counter()
+            fresh = ContinuousScheduler(max_batch=4, slice_len=2)
+            recovered = fresh.recover(d)
+            resume_it = {t.jid: (t._restore[1] if t._restore else 0)
+                         for t in recovered}
+            fresh.run_until_idle()
+            recovery_seconds += time.perf_counter() - t0
+
+        by_jid = {t.jid: t.result(0) for t in tickets if t.done()}
+        by_jid.update({t.jid: t.result(0) for t in recovered})
+        ordered = [by_jid[t.jid] for t in tickets]
+        identical = all(
+            _states_equal(r.state, c.state)
+            for r, c in zip(ref_results, ordered))
+        replayed = sum(killed_it[j] - resume_it[j] for j in resume_it)
+        total_replayed += replayed
+        total_killed += sum(killed_it.values())
+        total_iters += sum(r.iterations for r in ordered)
+        apps[app] = {
+            "requests": GATEWAY_REQUESTS,
+            "recovered": len(recovered),
+            "replayed_iterations": int(replayed),
+            "bit_identical": bool(identical),
+            "all_converged": all(r.converged for r in ordered),
+        }
+    return {
+        "apps": apps, "pool": GATEWAY_POOL, "scale": scale,
+        "kill_after_slices": KILL_AFTER_SLICES,
+        "recovery_seconds": recovery_seconds,
+        "replayed_iterations": int(total_replayed),
+        "total_iterations": int(total_iters),
+        "lost_work_ratio": total_replayed / max(total_iters, 1),
+        "cold_restart_ratio": total_killed / max(total_iters, 1),
+        "n_bit_identical": sum(a["bit_identical"] for a in apps.values()),
+    }
+
+
+# ----------------------------------------------------------------------
+def _overload_chaos(smoke: bool) -> dict:
+    program = REGISTRY["BFS"]()
+    config = SystemConfig.from_name("DG1")
+    g = rmat_graph(scale=GATEWAY_SCALE, edge_factor=8, seed=3,
+                   weighted=False)
+    sched = ContinuousScheduler(max_batch=2, slice_len=2)
+
+    # warm-up wave: teach the gateway its service time
+    warm = [sched.submit(program, g, config) for _ in range(4)]
+    sched.run_until_idle()
+    for t in warm:
+        t.result(0)
+    mean_latency = float(np.mean(sched.stats.latencies_s))
+
+    # 2x-capacity burst with deadlines one wave of service can meet but
+    # a growing queue cannot: the projection must shed the hopeless tail
+    offered = 4 * sched.max_batch
+    deadline = 1.5 * mean_latency
+    admitted, shed = [], 0
+    for _ in range(offered):
+        try:
+            admitted.append(sched.submit(program, g, config,
+                                         deadline_s=deadline))
+        except OverloadError:
+            shed += 1
+    sched.run_until_idle()
+    finished = [t for t in admitted if t.done()]
+    completed = sum(1 for t in finished
+                    if t.result(0) is not None)
+    return {
+        "offered": offered, "admitted": len(admitted), "shed": shed,
+        "shed_rate": shed / max(offered, 1),
+        "deadline_s": deadline, "mean_warm_latency_s": mean_latency,
+        "completed": completed,
+        "contained": bool(shed > 0 and completed == len(admitted)),
+    }
+
+
+# ----------------------------------------------------------------------
+def run_chaos_bench(out_path: str = "results/BENCH_chaos.json",
+                    smoke: bool = False) -> dict:
+    core = _core_chaos(smoke)
+    gateway = _gateway_chaos(smoke)
+    overload = _overload_chaos(smoke)
+    result = {
+        "smoke": bool(smoke),
+        "workload": {"core_app": CORE_APP, "core_k": CORE_K,
+                     "gateway_apps": list(GATEWAY_APPS),
+                     "gateway_pool": GATEWAY_POOL,
+                     "gateway_requests": GATEWAY_REQUESTS},
+        "core": core,
+        "gateway": gateway,
+        "overload": overload,
+        "summary": {
+            "core_lost_work_ratio": core["lost_work_ratio"],
+            "gateway_lost_work_ratio": gateway["lost_work_ratio"],
+            "recovery_seconds": (core["recovery_seconds"]
+                                 + gateway["recovery_seconds"]),
+            "n_bit_identical": (int(core["bit_identical"])
+                                + gateway["n_bit_identical"]),
+            "n_identity_checks": 1 + len(gateway["apps"]),
+            "shed_rate": overload["shed_rate"],
+            "overload_contained": overload["contained"],
+        },
+    }
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2))
+    s = result["summary"]
+    print(f"chaos_bench,"
+          f"bit_identical={s['n_bit_identical']}/{s['n_identity_checks']};"
+          f"core_lost_work={s['core_lost_work_ratio']:.3f};"
+          f"gateway_lost_work={s['gateway_lost_work_ratio']:.3f};"
+          f"shed_rate={s['shed_rate']:.2f};"
+          f"recovery={s['recovery_seconds']:.2f}s", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    run_chaos_bench(smoke="--smoke" in sys.argv[1:])

@@ -1,7 +1,7 @@
 """CI perf-regression gate over the tracked benchmark artifacts.
 
 Diffs the current
-``results/BENCH_{dispatch,autotune,batch,matrix,serve,resilience}.json``
+``results/BENCH_{dispatch,autotune,batch,matrix,serve,resilience,chaos}.json``
 against
 committed baselines under ``results/baselines/`` and **fails** (exit 1)
 when an artifact's geomean regression exceeds the threshold
@@ -13,7 +13,9 @@ workload x config (autotune), batched-vs-sequential per config x batch
 size (batch), best-config-vs-TG0 per workload (matrix),
 gateway-vs-serial-server throughput and p99 ratios per arrival mode
 (serve), plain-vs-checkpointed efficiency plus cold-vs-warm recovery
-speedup and per-config bit-identity (resilience) — *not* absolute
+speedup and per-config bit-identity (resilience), crash-recovery
+bit-identity / lost-work containment / overload containment as
+1.0-vs-1e-6 invariants (chaos) — *not* absolute
 microseconds.  Ratios are measured
 against a same-machine denominator, so a baseline recorded on one
 machine remains meaningful on a differently-provisioned CI runner;
@@ -54,6 +56,7 @@ ARTIFACTS = {
     "matrix": "BENCH_matrix.json",
     "serve": "BENCH_serve.json",
     "resilience": "BENCH_resilience.json",
+    "chaos": "BENCH_chaos.json",
 }
 DEFAULT_THRESHOLD = 0.20
 
@@ -117,6 +120,29 @@ def extract_metrics(kind: str, data: dict) -> dict:
         if rec:
             out["resilience/recovery/speedup"] = min(
                 rec["recovery_speedup"], RESILIENCE_RECOVERY_CAP)
+    elif kind == "chaos":
+        # every chaos metric is a 1.0-vs-1e-6 invariant: recovery
+        # wall-clock is noise, but losing bit-identity, replaying the
+        # whole run (lost_work_ratio >= 1 means durable checkpoints
+        # bought nothing over cold restart), or overload breaking an
+        # admitted request must blow the gate up unmissably
+        core = data.get("core", {})
+        if core:
+            out["chaos/core/identical"] = (
+                1.0 if core.get("bit_identical") else 1e-6)
+            out["chaos/core/lost_work_contained"] = (
+                1.0 if core.get("lost_work_ratio", 1.0) < 1.0 else 1e-6)
+        gw = data.get("gateway", {})
+        for app, cell in gw.get("apps", {}).items():
+            out[f"chaos/gateway/{app}/identical"] = (
+                1.0 if cell.get("bit_identical") else 1e-6)
+        if gw:
+            out["chaos/gateway/lost_work_contained"] = (
+                1.0 if gw.get("lost_work_ratio", 1.0) < 1.0 else 1e-6)
+        ov = data.get("overload", {})
+        if ov:
+            out["chaos/overload/contained"] = (
+                1.0 if ov.get("contained") else 1e-6)
     else:
         raise ValueError(f"unknown artifact kind {kind!r}")
     return out
@@ -149,6 +175,9 @@ def fingerprint(kind: str, data: dict) -> dict:
         return {"smoke": data.get("smoke"),
                 "workload": data.get("workload"),
                 "checkpoint_every": data.get("checkpoint_every")}
+    if kind == "chaos":
+        return {"smoke": data.get("smoke"),
+                "workload": data.get("workload")}
     raise ValueError(f"unknown artifact kind {kind!r}")
 
 
@@ -213,8 +242,26 @@ def compare_dirs(baseline_dir: str, current_dir: str,
                   f"benchmarks and `--update-baselines` (see README)")
             exit_code = max(exit_code, 2)
             continue
-        baseline = json.loads(bpath.read_text())
-        current = json.loads(cpath.read_text())
+        # a corrupt/truncated artifact must gate as loudly as a missing
+        # one — an unhandled JSONDecodeError here would read as a CI
+        # infrastructure flake instead of "your baseline is broken"
+        try:
+            baseline = json.loads(bpath.read_text())
+        except (ValueError, OSError) as exc:
+            print(f"perf-gate {kind}: UNREADABLE baseline {bpath} "
+                  f"({exc}) — re-run the benchmarks and "
+                  f"`python -m benchmarks.compare --update-baselines` "
+                  f"(see README), then commit the refreshed copy")
+            exit_code = max(exit_code, 2)
+            continue
+        try:
+            current = json.loads(cpath.read_text())
+        except (ValueError, OSError) as exc:
+            print(f"perf-gate {kind}: UNREADABLE current {cpath} "
+                  f"({exc}) — the benchmark step emitted a corrupt "
+                  f"artifact; re-run it before gating")
+            exit_code = max(exit_code, 2)
+            continue
         rep = compare_artifact(kind, baseline, current, threshold)
         if rep["status"] == "incompatible":
             print(f"perf-gate {kind}: INCOMPATIBLE baseline (pinned "

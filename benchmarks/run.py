@@ -69,6 +69,16 @@ def main() -> None:
     ap.add_argument("--resilience-smoke", action="store_true",
                     help="with --resilience-only: tiny graph, 3 repeats "
                          "(the CI smoke job)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="only run the kill-and-restart chaos benchmark "
+                         "and write results/BENCH_chaos.json (crash "
+                         "recovery from durable checkpoints and the "
+                         "gateway write-ahead journal: recovery seconds, "
+                         "lost-work ratio, overload shed rate, end-state "
+                         "bit-identity)")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="with --chaos-only: tiny graphs (the CI smoke "
+                         "job)")
     ap.add_argument("--matrix-only", action="store_true",
                     help="only run the 6-app x 6-input workload matrix "
                          "and write results/BENCH_matrix.json (per-cell "
@@ -105,6 +115,11 @@ def main() -> None:
     if args.resilience_only:
         from benchmarks.resilience import run_resilience_bench
         run_resilience_bench(smoke=args.resilience_smoke)
+        return
+
+    if args.chaos_only:
+        from benchmarks.chaos import run_chaos_bench
+        run_chaos_bench(smoke=args.chaos_smoke)
         return
 
     if args.json or args.dispatch_only:  # --dispatch-only implies --json

@@ -6,6 +6,8 @@ from repro.core.executor import (STATS, EdgeContext, ExecutorStats,
 from repro.core.batch import (BatchedEdgeContext, GraphBatch, bucket_key,
                               bucket_shape, get_graph_batch, pack_graphs)
 from repro.core.plan_cache import PLAN_CACHE, PlanCache
+from repro.core.durability import (CHECKPOINT_MAGIC, CHECKPOINT_VERSION,
+                                   CheckpointStore)
 from repro.core.resilience import (DEFAULT_CHECKPOINT_EVERY,
                                    DEFAULT_RING_CAPACITY, Checkpoint,
                                    CheckpointRing, ExecutionFault,
@@ -35,6 +37,7 @@ __all__ = [
     "BatchedEdgeContext", "GraphBatch", "bucket_key", "bucket_shape",
     "get_graph_batch", "pack_graphs",
     "PLAN_CACHE", "PlanCache",
+    "CHECKPOINT_MAGIC", "CHECKPOINT_VERSION", "CheckpointStore",
     "DEFAULT_CHECKPOINT_EVERY", "DEFAULT_RING_CAPACITY", "Checkpoint",
     "CheckpointRing", "ExecutionFault", "FaultInjector", "RetryPolicy",
     "build_sentinels", "check_certificate", "check_state_host",

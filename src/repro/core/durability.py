@@ -1,0 +1,257 @@
+"""Persistent checkpoints: spill :class:`CheckpointRing` boundaries to disk.
+
+PR 8's resilience layer survives *in-process* faults — a NaN, a runner
+exception, a compile failure — because the :class:`~repro.core.
+resilience.CheckpointRing` keeps clean boundaries in host memory.  A
+process death loses the ring.  This module is the crash-durability
+extension: :class:`CheckpointStore` writes every ring boundary to disk
+in a self-verifying format, so ``run(..., checkpoint_dir=...)`` can be
+killed at any instant (power loss, OOM kill, preemption) and a fresh
+process resumes from the newest intact boundary, **bit-identical** to
+an uninterrupted run — segment boundaries land on the same iteration
+multiples whether the run restarted or not, and the trace buffers
+travel inside the snapshot.
+
+File format (one file per checkpoint generation, ``ckpt-<seq>.rck``)::
+
+    magic   8 bytes   b"RPCKPT1\\n"
+    version u32 LE    format version (current: 1)
+    length  u64 LE    payload byte count
+    digest  32 bytes  SHA-256 of the payload
+    payload           npz archive: "__meta__" JSON (iteration, done flag,
+                      run fingerprint, buffer presence) + one entry per
+                      state leaf / trace buffer
+
+Every hazard a crash can leave behind is detected at *load*, not at
+use: a truncated file fails the length check, a bit-flipped byte fails
+the digest, a stale directory from a different (program, config, graph)
+fails the fingerprint — each rejected with a structured
+:class:`~repro.core.resilience.ExecutionFault` (``code=
+"corrupt_checkpoint"`` / ``"checkpoint_mismatch"``).  Recovery then
+falls back generation by generation: the newest intact file wins,
+corrupt ones are recorded in the run's fault history, and when *no*
+generation survives the run cold-starts from ``program.init`` — never
+a silently wrong resume.
+
+Writes are atomic (write to a ``.tmp-`` sibling, fsync, then
+``os.replace``), so a kill mid-write can only ever lose the checkpoint
+being written — the previous generation stays intact.  The store
+prunes itself to ``keep`` generations, always pinning the oldest
+(initial) one, mirroring the in-memory ring's cold-restart floor.
+
+The serving gateway's write-ahead journal (:mod:`repro.launch.journal`)
+reuses this store per ticket: each slice commit persists the ticket's
+post-slice state, so :meth:`~repro.launch.serve.GraphGateway.recover`
+re-admits unfinished tickets from their newest persisted boundary
+instead of iteration 0.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import struct
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.resilience import (DEFAULT_RING_CAPACITY, Checkpoint,
+                                   ExecutionFault)
+
+__all__ = ["CheckpointStore", "CHECKPOINT_MAGIC", "CHECKPOINT_VERSION"]
+
+CHECKPOINT_MAGIC = b"RPCKPT1\n"
+CHECKPOINT_VERSION = 1
+_HEADER = struct.Struct("<8sIQ32s")  # magic, version, payload_len, sha256
+
+
+def _encode_payload(cp: Checkpoint, fingerprint: Optional[dict]) -> bytes:
+    """Serialize one checkpoint into the npz payload (host numpy only)."""
+    if not isinstance(cp.state, dict):
+        raise ValueError("CheckpointStore persists dict state pytrees; "
+                         f"got {type(cp.state).__name__}")
+    meta = {
+        "it": int(cp.it),
+        "done": bool(cp.done),
+        "fingerprint": fingerprint,
+        "state_keys": sorted(cp.state),
+        "has_dir": cp.dir_buf is not None,
+        "has_occ": cp.occ_buf is not None,
+    }
+    arrays: Dict[str, np.ndarray] = {
+        "__meta__": np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), np.uint8),
+    }
+    for k in meta["state_keys"]:
+        arrays[f"state:{k}"] = np.asarray(cp.state[k])
+    if cp.dir_buf is not None:
+        arrays["dir_buf"] = np.asarray(cp.dir_buf)
+    if cp.occ_buf is not None:
+        arrays["occ_buf"] = np.asarray(cp.occ_buf)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _decode_payload(payload: bytes) -> Tuple[Checkpoint, Optional[dict]]:
+    with np.load(io.BytesIO(payload), allow_pickle=False) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        state = {k: z[f"state:{k}"].copy() for k in meta["state_keys"]}
+        dir_buf = z["dir_buf"].copy() if meta["has_dir"] else None
+        occ_buf = z["occ_buf"].copy() if meta["has_occ"] else None
+    cp = Checkpoint(it=int(meta["it"]), done=bool(meta["done"]),
+                    state=state, dir_buf=dir_buf, occ_buf=occ_buf)
+    return cp, meta.get("fingerprint")
+
+
+class CheckpointStore:
+    """Durable, self-verifying checkpoint generations under one directory.
+
+    ``fingerprint`` identifies the run the checkpoints belong to (the
+    resilience layer passes program name, config name and graph shape);
+    a generation written under a different fingerprint is rejected at
+    load with ``code="checkpoint_mismatch"`` — a reused directory can
+    therefore never resume the wrong run.  ``keep`` bounds how many
+    generations stay on disk: the oldest (initial) generation is pinned
+    as the cold-restart floor, the ``keep - 1`` newest ride along.
+    """
+
+    def __init__(self, root, keep: int = DEFAULT_RING_CAPACITY,
+                 fingerprint: Optional[dict] = None):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = int(keep)
+        self.fingerprint = fingerprint
+        existing = self.generations()
+        self._seq = (self._gen_seq(existing[0]) + 1) if existing else 0
+
+    # -- write ----------------------------------------------------------
+    def save(self, cp: Checkpoint) -> Path:
+        """Persist one checkpoint atomically; returns its final path.
+
+        The payload is fully written and fsynced under a ``.tmp-`` name
+        before ``os.replace`` publishes it — readers (including a
+        recovery racing this writer's death) only ever see complete
+        generations or none.
+        """
+        payload = _encode_payload(cp, self.fingerprint)
+        header = _HEADER.pack(CHECKPOINT_MAGIC, CHECKPOINT_VERSION,
+                              len(payload), hashlib.sha256(payload).digest())
+        final = self.root / f"ckpt-{self._seq:08d}.rck"
+        tmp = self.root / f".tmp-{final.name}"
+        with open(tmp, "wb") as f:
+            f.write(header)
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        self._seq += 1
+        self._prune()
+        return final
+
+    def _prune(self) -> None:
+        gens = self.generations()          # newest first
+        if len(gens) <= self.keep:
+            return
+        pinned = gens[-1]                  # oldest = the initial snapshot
+        for path in gens[self.keep - 1:]:
+            if path != pinned:
+                path.unlink(missing_ok=True)
+
+    # -- read -----------------------------------------------------------
+    @staticmethod
+    def _gen_seq(path: Path) -> int:
+        return int(path.stem.split("-")[1])
+
+    def generations(self) -> List[Path]:
+        """Published generation files, newest first."""
+        return sorted(self.root.glob("ckpt-*.rck"),
+                      key=self._gen_seq, reverse=True)
+
+    def load(self, path) -> Checkpoint:
+        """Load and verify one generation.
+
+        Raises :class:`ExecutionFault` with ``code="corrupt_checkpoint"``
+        for any integrity failure (short header, bad magic/version,
+        truncated payload, digest mismatch, undecodable payload) and
+        ``code="checkpoint_mismatch"`` when the file is intact but
+        belongs to a different run fingerprint.
+        """
+        path = Path(path)
+        raw = path.read_bytes()
+        if len(raw) < _HEADER.size:
+            raise ExecutionFault("corrupt_checkpoint", {
+                "path": str(path), "reason": "short_header",
+                "bytes": len(raw)})
+        magic, version, length, digest = _HEADER.unpack_from(raw)
+        if magic != CHECKPOINT_MAGIC:
+            raise ExecutionFault("corrupt_checkpoint", {
+                "path": str(path), "reason": "bad_magic"})
+        if version != CHECKPOINT_VERSION:
+            raise ExecutionFault("corrupt_checkpoint", {
+                "path": str(path), "reason": "unknown_version",
+                "version": int(version)})
+        payload = raw[_HEADER.size:]
+        if len(payload) != length:
+            raise ExecutionFault("corrupt_checkpoint", {
+                "path": str(path), "reason": "truncated",
+                "expected_bytes": int(length), "got_bytes": len(payload)})
+        if hashlib.sha256(payload).digest() != digest:
+            raise ExecutionFault("corrupt_checkpoint", {
+                "path": str(path), "reason": "checksum_mismatch"})
+        try:
+            cp, fp = _decode_payload(payload)
+        except Exception as err:
+            raise ExecutionFault("corrupt_checkpoint", {
+                "path": str(path), "reason": "undecodable",
+                "error": repr(err)}) from err
+        if self.fingerprint is not None and fp != self.fingerprint:
+            raise ExecutionFault("checkpoint_mismatch", {
+                "path": str(path), "expected": self.fingerprint,
+                "found": fp})
+        return cp
+
+    def load_all(self) -> Tuple[List[Checkpoint], List[dict]]:
+        """Every intact generation oldest-first, plus structured fault
+        records for the ones that were rejected.
+
+        This is the resume path: the caller seeds a fresh in-memory ring
+        with the surviving boundaries (so post-restart retry rollback
+        has the same depth an uninterrupted run would) and appends the
+        fault records to the run's fault history.  An empty first list
+        means cold restart.
+        """
+        good: List[Checkpoint] = []
+        faults: List[dict] = []
+        for path in reversed(self.generations()):   # oldest first
+            try:
+                good.append(self.load(path))
+            except ExecutionFault as err:
+                faults.append({"kind": err.code, **err.detail})
+        return good, faults
+
+    def load_latest(self) -> Tuple[Optional[Checkpoint], List[dict]]:
+        """The newest intact generation (or None), plus fault records
+        for every newer generation that had to be rejected first."""
+        faults: List[dict] = []
+        for path in self.generations():             # newest first
+            try:
+                return self.load(path), faults
+            except ExecutionFault as err:
+                faults.append({"kind": err.code, **err.detail})
+        return None, faults
+
+    def clear(self) -> None:
+        """Remove every generation (including stale tmp files)."""
+        for path in self.root.glob("ckpt-*.rck"):
+            path.unlink(missing_ok=True)
+        for path in self.root.glob(".tmp-*"):
+            path.unlink(missing_ok=True)
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self.generations())

@@ -826,7 +826,8 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
         engine: str = "fused", autotune=None,
         checkpoint_every: int = 0, retry=None, sentinels: bool = True,
         ring_capacity: Optional[int] = None,
-        fault_injector=None) -> RunResult:
+        fault_injector=None,
+        checkpoint_dir: Optional[str] = None) -> RunResult:
     """Iterate ``program`` on ``graph`` under ``config`` to convergence.
 
     ``engine`` picks the convergence loop: ``"fused"`` (default) runs
@@ -856,12 +857,17 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
     ``sentinels=False`` disables the sentinel battery and the
     converged-state certificate; ``ring_capacity`` bounds the ring;
     ``fault_injector`` is the seeded fault harness's hook
-    (:mod:`repro.testing.faults`).
+    (:mod:`repro.testing.faults`); ``checkpoint_dir`` spills every
+    checkpoint boundary to a durable on-disk
+    :class:`~repro.core.durability.CheckpointStore` and resumes a
+    killed run from the newest intact generation, bit-identical to an
+    uninterrupted run.
     """
     if engine not in ("fused", "host"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'fused' or 'host'")
-    if checkpoint_every or retry is not None or fault_injector is not None:
+    if (checkpoint_every or retry is not None or fault_injector is not None
+            or checkpoint_dir is not None):
         from repro.core.resilience import run_resilient
         return run_resilient(
             program, graph, config, key=key, max_iters=max_iters,
@@ -869,7 +875,8 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
             sparse_edge_capacity=sparse_edge_capacity, engine=engine,
             autotune=autotune, checkpoint_every=checkpoint_every,
             retry=retry, sentinels=sentinels,
-            ring_capacity=ring_capacity, fault_injector=fault_injector)
+            ring_capacity=ring_capacity, fault_injector=fault_injector,
+            checkpoint_dir=checkpoint_dir)
     ctx = EdgeContext.create(graph, config, use_pallas=use_pallas,
                              sparse_edge_capacity=sparse_edge_capacity,
                              autotune=autotune)

@@ -135,7 +135,9 @@ class CheckpointRing:
 
     def __init__(self, capacity: int = DEFAULT_RING_CAPACITY):
         if capacity < 1:
-            raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+            raise ValueError(
+                f"CheckpointRing capacity must be >= 1, got "
+                f"capacity={capacity}")
         self.capacity = capacity
         self._first: Optional[Checkpoint] = None
         self._ring: deque = deque(maxlen=capacity - 1)
@@ -456,9 +458,12 @@ def _decode_traces(db, ob, it, traced, occ_traced):
 
 
 def _segment_loop(program, ctx, cp, limit, K, ring, sentinel_fns, injector,
-                  warmup, acct, attempt, traced, occ_traced, engine):
+                  warmup, acct, attempt, traced, occ_traced, engine,
+                  store=None):
     """Drive segments from checkpoint ``cp`` to convergence/limit,
-    snapshotting each boundary into ``ring``; raises
+    snapshotting each boundary into ``ring`` (and, when ``store`` is a
+    :class:`~repro.core.durability.CheckpointStore`, spilling it to
+    disk so a process death resumes from here); raises
     :class:`_SentinelTrip` (or whatever the injector raises) on
     failure."""
     names = _sentinel_names(sentinel_fns, occ_traced)
@@ -526,10 +531,13 @@ def _segment_loop(program, ctx, cp, limit, K, ring, sentinel_fns, injector,
             bad = _tripped(names, flags)
             if bad:
                 raise _SentinelTrip(bad, lo, it, attempt, engine)
-        ring.push(Checkpoint(
+        boundary = Checkpoint(
             it=it, done=done, state=host_state,
             dir_buf=(np.asarray(db).copy() if traced else None),
-            occ_buf=(np.asarray(ob).copy() if occ_traced else None)))
+            occ_buf=(np.asarray(ob).copy() if occ_traced else None))
+        ring.push(boundary)
+        if store is not None:
+            store.save(boundary)
         prev_host = host_state
 
     if done and check and program.certificate is not None:
@@ -553,14 +561,26 @@ def run_resilient(program: VertexProgram, graph: Graph,
                   retry: Optional[RetryPolicy] = None,
                   sentinels: bool = True,
                   ring_capacity: Optional[int] = None,
-                  fault_injector: Optional[FaultInjector] = None
+                  fault_injector: Optional[FaultInjector] = None,
+                  checkpoint_dir: Optional[str] = None
                   ) -> RunResult:
     """Checkpointed, sentinel-guarded, retrying counterpart of
     :func:`repro.core.executor.run` (which delegates here whenever any
     resilience knob is set).  Results are bit-identical to the plain
     engines; ``RunResult.outcome`` reports ``"converged"``,
     ``"iter_limit"`` or ``"faulted"`` (with the fault history attached
-    under ``RunResult.fault``)."""
+    under ``RunResult.fault``).
+
+    ``checkpoint_dir`` makes the run *crash-durable*: every ring
+    boundary is also spilled to a :class:`~repro.core.durability.
+    CheckpointStore` under that directory, and a fresh call pointed at
+    the same directory resumes from the newest intact on-disk boundary
+    instead of iteration 0 — bit-identical to an uninterrupted run,
+    since segment boundaries fall on the same iteration multiples
+    either way.  Corrupt or foreign generations are rejected at load
+    (structured ``corrupt_checkpoint`` / ``checkpoint_mismatch``
+    records in the fault history) and recovery falls back generation by
+    generation, ultimately to a cold restart."""
     if engine not in ("fused", "host"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'fused' or 'host'")
@@ -581,19 +601,45 @@ def run_resilient(program: VertexProgram, graph: Graph,
     if max_attempts < 1:
         raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
 
-    state0 = program.init(graph, key) if key is not None \
-        else program.init(graph)
-    state0 = jax.tree.map(jnp.asarray, state0)
-    traced, occ_traced = _trace_flags(program, state0)
-    ring = CheckpointRing(ring_capacity or DEFAULT_RING_CAPACITY)
-    ring.push(Checkpoint(
-        it=0, done=False, state=_to_host(state0),
-        dir_buf=np.zeros((limit,), bool) if traced else None,
-        occ_buf=(np.full((limit,), DENSE_OCC, np.float32)
-                 if occ_traced else None)))
+    capacity = ring_capacity or DEFAULT_RING_CAPACITY
+    store = None
+    faults: List[dict] = []
+    ring = CheckpointRing(capacity)
+    if checkpoint_dir is not None:
+        from repro.core.durability import CheckpointStore
+        store = CheckpointStore(
+            checkpoint_dir, keep=capacity,
+            fingerprint={"program": program.name, "config": config.name,
+                         "n_nodes": int(graph.n_nodes),
+                         "n_edges": int(graph.n_edges),
+                         "limit": int(limit), "k": int(K)})
+        disk_cps, disk_faults = store.load_all()
+        faults.extend(disk_faults)
+        for disk_cp in disk_cps:
+            ring.push(disk_cp)
+    if len(ring):
+        # resumed: the newest intact on-disk boundary replaces
+        # program.init — segment boundaries are deterministic multiples
+        # of K, so the remaining segments are bit-identical to what the
+        # killed run would have executed
+        seed_cp = ring.latest()
+        traced = seed_cp.dir_buf is not None
+        occ_traced = seed_cp.occ_buf is not None
+    else:
+        state0 = program.init(graph, key) if key is not None \
+            else program.init(graph)
+        state0 = jax.tree.map(jnp.asarray, state0)
+        traced, occ_traced = _trace_flags(program, state0)
+        initial = Checkpoint(
+            it=0, done=False, state=_to_host(state0),
+            dir_buf=np.zeros((limit,), bool) if traced else None,
+            occ_buf=(np.full((limit,), DENSE_OCC, np.float32)
+                     if occ_traced else None))
+        ring.push(initial)
+        if store is not None:
+            store.save(initial)
     sentinel_fns = build_sentinels(program) if sentinels else []
     acct = _Accounting()
-    faults: List[dict] = []
     attempt = 0
     while True:
         knobs = knobs0 if attempt == 0 \
@@ -612,7 +658,7 @@ def run_resilient(program: VertexProgram, graph: Graph,
             res = _segment_loop(program, ctx, cp, limit, K, ring,
                                 sentinel_fns, injector, warmup, acct,
                                 attempt, traced, occ_traced,
-                                knobs["engine"])
+                                knobs["engine"], store=store)
             if faults:
                 res.fault = {"history": faults, "recovered": True}
             return res

@@ -1,0 +1,264 @@
+"""Write-ahead admission journal for the serving gateway.
+
+The gateway's containment story (PR 8) is in-process: sentinel trips,
+runner exceptions and stale-update corruption are healed from host-side
+pre-slice states.  A gateway *process death* loses all of it — queues,
+rosters, parked states, tickets.  :class:`WriteAheadJournal` is the
+durable half: every admission-lifecycle transition is appended to an
+on-disk journal **before** the in-memory step it describes completes,
+so :meth:`~repro.launch.serve.ContinuousScheduler.recover` can rebuild
+the unfinished ticket set of a killed gateway and re-admit each ticket
+from its newest persisted slice boundary — producing results
+bit-identical to the uninterrupted gateway (per-slot iteration
+counters make cohort composition irrelevant; PR 8's fixpoint
+certificate still proves every resumed convergence).
+
+Layout under ``journal_dir``::
+
+    journal.waj          append-only JSONL, one record per line:
+                         ``<crc32 hex> <json body>``
+    graphs/<fp>.npz      each distinct submitted graph, persisted once
+                         verbatim (every Graph array bit-for-bit, keyed
+                         by content SHA-256) — replay rebuilds the exact
+                         graph, not a re-derivation
+    tickets/<jid>/       a per-ticket :class:`~repro.core.durability.
+                         CheckpointStore` holding its slice-boundary
+                         states
+
+Record types (all carry ``jid``, the journal-scoped ticket id —
+``Ticket.id`` is a process-local counter and dies with the process):
+
+- ``submit``: program name, config name, graph fingerprint, knobs,
+  ``max_iters`` / ``deadline_s`` / serialized PRNG key.
+- ``admit``: the ticket claimed a roster slot.
+- ``commit``: one slice boundary committed — iteration counter plus the
+  ticket's cumulative direction/occupancy traces and dispatch count
+  (the checkpoint store holds the state itself; trace metadata lives
+  here and is matched to a checkpoint by iteration, so a corrupt newest
+  generation falls back to an older state *with* its matching traces).
+- ``retire``: terminal outcome; the ticket's checkpoint store is
+  deleted (a retired ticket is never re-admitted).
+
+Each line's CRC makes torn writes self-describing: a crash can leave at
+most one partial final line, which replay skips as an expected crash
+artifact (counted, not fatal); any *interior* corruption is likewise
+skipped and surfaced in :meth:`replay`'s report.  Replay itself appends
+nothing — recovering twice from the same journal is idempotent by
+construction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from hashlib import sha256
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.durability import CheckpointStore
+from repro.core.resilience import Checkpoint
+from repro.graph.structure import Graph
+
+__all__ = ["WriteAheadJournal", "JOURNAL_FILE"]
+
+JOURNAL_FILE = "journal.waj"
+
+#: Graph array fields persisted verbatim (order matters: it defines the
+#: content fingerprint) plus the static ints.
+_GRAPH_ARRAYS = ("src", "dst", "weight", "row_ptr_out", "src_in", "dst_in",
+                 "weight_in", "row_ptr_in", "out_degree", "in_degree",
+                 "perm_owned", "block_ptr")
+_GRAPH_STATICS = ("n_nodes", "n_edges", "block_size")
+
+
+def graph_fingerprint(graph: Graph) -> str:
+    """Content SHA-256 over every array (values + dtype + shape) and
+    static field — two bit-identical graphs share one persisted copy."""
+    h = sha256()
+    for name in _GRAPH_ARRAYS:
+        a = np.asarray(getattr(graph, name))
+        h.update(name.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    for name in _GRAPH_STATICS:
+        h.update(f"{name}={getattr(graph, name)}".encode())
+    return h.hexdigest()
+
+
+def _serialize_key(key) -> Optional[dict]:
+    """A PRNG key as JSON (None when the key is not a plain array —
+    replay then relies on the ticket's persisted checkpoints)."""
+    if key is None:
+        return None
+    try:
+        a = np.asarray(key)
+        return {"dtype": str(a.dtype), "data": a.tolist()}
+    except Exception:  # noqa: BLE001 — typed/opaque keys
+        return None
+
+
+def _deserialize_key(rec: Optional[dict]):
+    if rec is None:
+        return None
+    return np.asarray(rec["data"], dtype=np.dtype(rec["dtype"]))
+
+
+class WriteAheadJournal:
+    """Append-only gateway journal plus its graph and checkpoint stores.
+
+    One instance is owned by a scheduler; :meth:`replay` is the
+    read-side used by recovery (it never writes).
+    """
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        (self.root / "graphs").mkdir(exist_ok=True)
+        (self.root / "tickets").mkdir(exist_ok=True)
+        self.path = self.root / JOURNAL_FILE
+        self.torn_lines = 0
+        self._graph_cache: Dict[str, Graph] = {}
+        records, _ = self.replay()
+        self._next_jid = 1 + max(
+            (int(j.split("-")[1]) for j in records), default=-1)
+
+    # -- write side ------------------------------------------------------
+    def _append(self, body: Dict[str, Any]) -> None:
+        line = json.dumps(body, sort_keys=True)
+        crc = zlib.crc32(line.encode()) & 0xFFFFFFFF
+        with open(self.path, "a") as f:
+            f.write(f"{crc:08x} {line}\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def record_submit(self, program, graph: Graph, config, *, key,
+                      max_iters, deadline_s, knobs: Dict[str, Any]) -> str:
+        """Persist the graph (once) and append the submit record;
+        returns the journal-scoped ticket id."""
+        jid = f"jid-{self._next_jid:08d}"
+        self._next_jid += 1
+        self._append({
+            "type": "submit", "jid": jid,
+            "program": program.name, "config": config.name,
+            "graph": self.persist_graph(graph),
+            "key": _serialize_key(key),
+            "max_iters": max_iters, "deadline_s": deadline_s,
+            "knobs": dict(knobs),
+        })
+        return jid
+
+    def record_admit(self, jid: str) -> None:
+        self._append({"type": "admit", "jid": jid})
+
+    def record_commit(self, jid: str, it: int, state,
+                      dispatches: int, trace: Optional[str],
+                      occs: Optional[List[float]]) -> None:
+        """One committed slice boundary: the record first (so every
+        persisted checkpoint has its matching trace metadata even if
+        the process dies between the two writes), then the state into
+        the ticket's checkpoint store."""
+        self._append({"type": "commit", "jid": jid, "it": int(it),
+                      "dispatches": int(dispatches), "trace": trace,
+                      "occs": occs})
+        self.store_for(jid).save(Checkpoint(
+            it=int(it), done=False, state=state,
+            dir_buf=None, occ_buf=None))
+
+    def record_retire(self, jid: str, outcome: str) -> None:
+        self._append({"type": "retire", "jid": jid, "outcome": outcome})
+        shutil.rmtree(self.root / "tickets" / jid, ignore_errors=True)
+
+    # -- graph persistence ----------------------------------------------
+    def persist_graph(self, graph: Graph) -> str:
+        fp = graph_fingerprint(graph)
+        path = self.root / "graphs" / f"{fp}.npz"
+        if not path.exists():
+            arrays = {n: np.asarray(getattr(graph, n))
+                      for n in _GRAPH_ARRAYS}
+            arrays["__static__"] = np.array(
+                [int(getattr(graph, n)) for n in _GRAPH_STATICS], np.int64)
+            tmp = path.with_name(f".tmp-{path.name}")
+            with open(tmp, "wb") as f:
+                np.savez(f, **arrays)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        self._graph_cache.setdefault(fp, graph)
+        return fp
+
+    def load_graph(self, fp: str) -> Graph:
+        """Rebuild the persisted graph field-by-field (bit-identical to
+        the submitted one — no ``from_coo`` re-derivation).  Cached per
+        fingerprint so every replayed ticket over one graph shares a
+        single instance (lane packing and the plan cache key on graph
+        identity)."""
+        if fp in self._graph_cache:
+            return self._graph_cache[fp]
+        path = self.root / "graphs" / f"{fp}.npz"
+        with np.load(path, allow_pickle=False) as z:
+            statics = z["__static__"]
+            graph = Graph(
+                **{n: z[n].copy() for n in _GRAPH_ARRAYS},
+                **{n: int(statics[i])
+                   for i, n in enumerate(_GRAPH_STATICS)})
+        self._graph_cache[fp] = graph
+        return graph
+
+    def store_for(self, jid: str) -> CheckpointStore:
+        return CheckpointStore(self.root / "tickets" / jid,
+                               fingerprint={"jid": jid})
+
+    # -- read side -------------------------------------------------------
+    def replay(self) -> Tuple[Dict[str, Dict[str, Any]], Dict[str, int]]:
+        """Fold the journal into per-ticket lifecycle state.
+
+        Returns ``(tickets, report)``: ``tickets[jid]`` has the submit
+        record under ``"submit"``, ``"admitted"``, the list of
+        ``"commits"`` (ordered), and ``"retired"`` (outcome or None).
+        ``report`` counts skipped lines — ``torn`` (bad CRC / partial
+        line, the expected crash artifact) and ``orphan`` (a record for
+        a jid with no surviving submit).
+        """
+        tickets: Dict[str, Dict[str, Any]] = {}
+        report = {"lines": 0, "torn": 0, "orphan": 0}
+        if not self.path.exists():
+            self.torn_lines = 0
+            return tickets, report
+        for raw in self.path.read_text().splitlines():
+            report["lines"] += 1
+            try:
+                crc_hex, line = raw.split(" ", 1)
+                if (zlib.crc32(line.encode()) & 0xFFFFFFFF) != int(
+                        crc_hex, 16):
+                    raise ValueError("crc mismatch")
+                body = json.loads(line)
+            except Exception:  # noqa: BLE001 — torn/corrupt line
+                report["torn"] += 1
+                continue
+            jid = body.get("jid")
+            if body["type"] == "submit":
+                tickets[jid] = {"submit": body, "admitted": False,
+                                "commits": [], "retired": None}
+                continue
+            if jid not in tickets:
+                report["orphan"] += 1
+                continue
+            if body["type"] == "admit":
+                tickets[jid]["admitted"] = True
+            elif body["type"] == "commit":
+                tickets[jid]["commits"].append(body)
+            elif body["type"] == "retire":
+                tickets[jid]["retired"] = body["outcome"]
+        self.torn_lines = report["torn"]
+        return tickets, report
+
+    def unfinished(self) -> Dict[str, Dict[str, Any]]:
+        """The replayed tickets that never retired — the re-admission
+        set for recovery, in submit order."""
+        tickets, _ = self.replay()
+        return {jid: rec for jid, rec in tickets.items()
+                if rec["retired"] is None}

@@ -84,8 +84,8 @@ from repro.core.vertex_program import VertexProgram
 from repro.graph.structure import Graph, validate_graph
 
 __all__ = ["GraphGateway", "ContinuousScheduler", "Ticket", "GatewayStats",
-           "AdmissionError", "GatewayBackpressure", "CancelledError",
-           "main"]
+           "AdmissionError", "GatewayBackpressure", "OverloadError",
+           "CancelledError", "main"]
 
 
 class AdmissionError(ValueError):
@@ -108,6 +108,24 @@ class GatewayBackpressure(RuntimeError):
     Callers are expected to retry with backoff (or shed load)."""
 
 
+class OverloadError(RuntimeError):
+    """A deadline-carrying request shed at admission: the projected
+    queue delay (waves of queued work ahead × the gateway's observed
+    per-request service time, both from :class:`GatewayStats`) already
+    exceeds the request's ``deadline_s``, so admitting it would only
+    burn device time on a result the caller has declared worthless.
+
+    ``code`` is ``"overload_shed"``; ``detail`` carries the projection
+    the decision was made from.  Requests without a deadline are never
+    shed — they fall under plain bounded-queue backpressure.
+    """
+
+    def __init__(self, code: str, detail: Optional[Dict[str, Any]] = None):
+        self.code = code
+        self.detail = dict(detail or {})
+        super().__init__(f"{code}: {self.detail}" if self.detail else code)
+
+
 class CancelledError(RuntimeError):
     """Raised by :meth:`Ticket.result` for a cancelled request."""
 
@@ -128,6 +146,13 @@ class Ticket:
                  config: SystemConfig, key, max_iters: Optional[int],
                  deadline_s: Optional[float]):
         self.id = next(self._ids)
+        #: journal-scoped id (stable across process restarts); assigned
+        #: at submit when the scheduler runs with a write-ahead journal
+        self.jid: Optional[str] = None
+        #: recovery payload: ``(state, it, meta)`` from the ticket's
+        #: newest persisted checkpoint — honoured (instead of
+        #: ``program.init``) when the ticket claims a roster slot
+        self._restore = None
         self.program = program
         self.graph = graph
         self.config = config
@@ -200,6 +225,12 @@ class GatewayStats:
     faulted: int = 0
     rejected: int = 0
     backpressure_rejections: int = 0
+    shed: int = 0
+    recovered_tickets: int = 0
+    breaker_opens: int = 0
+    breaker_closes: int = 0
+    breaker_probes: int = 0
+    solo_degraded_slices: int = 0
     slices: int = 0
     roster_rebuilds: int = 0
     slice_retries: int = 0
@@ -251,6 +282,18 @@ class GatewayStats:
     def _pct(xs: List[float], q: float) -> Optional[float]:
         return float(np.percentile(np.asarray(xs), q)) if xs else None
 
+    def projected_delay_s(self, queued_ahead: int,
+                          max_batch: int) -> Optional[float]:
+        """Projected queue delay for a request arriving behind
+        ``queued_ahead`` waiting requests: full admission waves ahead of
+        it × the observed mean end-to-end service time.  ``None`` until
+        at least one request has completed — a cold gateway never sheds
+        on a projection it has no data for."""
+        if not self.latencies_s:
+            return None
+        waves = (queued_ahead + max_batch) // max_batch
+        return waves * float(np.mean(self.latencies_s))
+
     def snapshot(self) -> Dict[str, Any]:
         """One JSON-able summary dict (the serving metrics schema)."""
         lat = self.latencies_s
@@ -264,6 +307,12 @@ class GatewayStats:
             "timed_out": self.timed_out, "cancelled": self.cancelled,
             "faulted": self.faulted, "rejected": self.rejected,
             "backpressure_rejections": self.backpressure_rejections,
+            "shed": self.shed,
+            "recovered_tickets": self.recovered_tickets,
+            "breaker_opens": self.breaker_opens,
+            "breaker_closes": self.breaker_closes,
+            "breaker_probes": self.breaker_probes,
+            "solo_degraded_slices": self.solo_degraded_slices,
             "slices": self.slices,
             "roster_rebuilds": self.roster_rebuilds,
             "slice_retries": self.slice_retries,
@@ -282,6 +331,66 @@ class GatewayStats:
 
 
 # ---------------------------------------------------------------------------
+class _Breaker:
+    """Per-lane circuit breaker over slice health.
+
+    State machine (surfaced in ``GatewayStats``):
+
+    - **closed** (healthy): packed-roster slices; ``threshold``
+      *consecutive* faulty slices (runner exception or sentinel trip
+      anywhere in the roster) trip it open.
+    - **open**: the lane routes every active slot **solo-degraded**
+      (isolated B=1 slices — per-slot iteration counters keep results
+      bit-identical, only batching efficiency is sacrificed) so one
+      poisoned cohabitant cannot keep failing the whole roster; after
+      ``cooldown`` solo rounds the breaker half-opens.
+    - **half-open**: the next dispatch is a single packed-roster
+      *probe*; a clean probe closes the breaker, a faulty one reopens
+      it for another cooldown.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown: int = 4):
+        if threshold < 1 or cooldown < 1:
+            raise ValueError("breaker threshold and cooldown must be >= 1")
+        self.threshold = int(threshold)
+        self.cooldown = int(cooldown)
+        self.state = "closed"
+        self.failures = 0
+        self._cool = 0
+
+    def route(self) -> str:
+        """How the next dispatch should run: ``"packed"`` / ``"solo"``
+        / ``"probe"``."""
+        if self.state == "open":
+            return "solo"
+        if self.state == "half_open":
+            return "probe"
+        return "packed"
+
+    def tick(self, stats: GatewayStats) -> None:
+        """One solo-degraded round elapsed while open."""
+        self._cool -= 1
+        if self._cool <= 0:
+            self.state = "half_open"
+
+    def record_fault(self, stats: GatewayStats) -> None:
+        self.failures += 1
+        if (self.state == "half_open"
+                or (self.state == "closed"
+                    and self.failures >= self.threshold)):
+            self.state = "open"
+            self._cool = self.cooldown
+            self.failures = 0
+            stats.breaker_opens += 1
+
+    def record_clean(self, stats: GatewayStats) -> None:
+        if self.state == "half_open":
+            self.state = "closed"
+            stats.breaker_closes += 1
+        self.failures = 0
+
+
+# ---------------------------------------------------------------------------
 class _Lane:
     """One (program, config, knobs, bucket) service class.
 
@@ -296,12 +405,15 @@ class _Lane:
     """
 
     def __init__(self, program: VertexProgram, config: SystemConfig,
-                 use_pallas: bool, cap: Optional[int], autotune):
+                 use_pallas: bool, cap: Optional[int], autotune,
+                 journal=None, breaker: Optional[_Breaker] = None):
         self.program = program
         self.config = config
         self.use_pallas = use_pallas
         self.cap = cap
         self.autotune = autotune
+        self.journal = journal
+        self.breaker = breaker if breaker is not None else _Breaker()
         self.queue: deque = deque()
         self.roster: List[Graph] = []
         self.tickets: List[Optional[Ticket]] = []
@@ -341,12 +453,40 @@ class _Lane:
                 t._finish(None, CancelledError(f"request {t.id} cancelled "
                                                "while queued"), clock())
                 stats.record_done(t, "cancelled")
+                if self.journal is not None and t.jid is not None:
+                    self.journal.record_retire(t.jid, "cancelled")
                 continue
             slot = self._claim_slot(t.graph, max_batch)
             if slot is None:
                 break
             self.queue.popleft()
             self.tickets[slot] = t
+            if t._restore is not None:
+                # journal recovery: resume from the ticket's newest
+                # persisted slice boundary instead of iteration 0 —
+                # state, iteration counter and cumulative traces all
+                # come from the checkpoint, so the remaining slices are
+                # the ones the killed gateway had left to run
+                st, it0, meta = t._restore
+                self.states[slot] = st
+                self.it_b[slot] = int(it0)
+                self.limit_b[slot] = int(t.max_iters
+                                         if t.max_iters is not None
+                                         else self.program.max_iters)
+                t._dispatches = int(meta.get("dispatches", 0))
+                if meta.get("trace") is not None:
+                    t._traced = True
+                    t._trace = list(meta["trace"])
+                if meta.get("occs") is not None:
+                    t._occ_traced = True
+                    t._occs = list(meta["occs"])
+                t._restore = None
+                t.admitted_at = clock()
+                stats.admitted += 1
+                admitted = True
+                if self.journal is not None and t.jid is not None:
+                    self.journal.record_admit(t.jid)
+                continue
             if t.key is None:
                 # default-key init is deterministic per graph (randomized
                 # apps derive their key from graph_key), so repeat traffic
@@ -369,6 +509,8 @@ class _Lane:
             t.admitted_at = clock()
             stats.admitted += 1
             admitted = True
+            if self.journal is not None and t.jid is not None:
+                self.journal.record_admit(t.jid)
         if tuple(id(g) for g in self.roster) != before:
             self.batch = get_graph_batch(tuple(self.roster))
             self.bctx = BatchedEdgeContext.create(
@@ -390,6 +532,11 @@ class _Lane:
         slice is retried whole under ``retry``, then slot-by-slot in
         isolated B=1 batches, and only slots that still fail are
         quarantined (``_quarantine``) — cohabitants never lose work.
+
+        The lane's circuit breaker sits above all of this: repeated
+        faulty slices open it, routing every slot solo-degraded (B=1,
+        bit-identical, just unbatched) until a half-open packed probe
+        comes back clean.
         """
         active = [i for i, t in enumerate(self.tickets) if t is not None]
         if not active:
@@ -402,11 +549,23 @@ class _Lane:
         # baseline (unpack replaces the list wholesale, so these
         # references stay untouched by the dispatch)
         prev = {i: self.states[i] for i in active}
+        route = self.breaker.route()
+        if route == "solo":
+            stats.solo_degraded_slices += 1
+            for i in active:
+                self._solo_advance(i, prev[i], slice_len, clock, stats,
+                                   sentinels, injector)
+            self.breaker.tick(stats)
+            return True
+        if route == "probe":
+            stats.breaker_probes += 1
+        trips_before = stats.sentinel_trips
         try:
             if injector is not None:
                 injector.before_slice([self.tickets[i].id for i in active])
             sl = self._run_slice(slice_len)
         except Exception:  # noqa: BLE001 — containment is the point
+            self.breaker.record_fault(stats)
             self._recover(active, prev, slice_len, clock, stats, retry,
                           sentinels, injector)
             return True
@@ -416,6 +575,10 @@ class _Lane:
         for i in active:
             self._commit_slot(i, i, sl, self.states[i], prev[i], now,
                               stats, sentinels, injector)
+        if stats.sentinel_trips > trips_before:
+            self.breaker.record_fault(stats)
+        else:
+            self.breaker.record_clean(stats)
         return True
 
     def _run_slice(self, slice_len: int):
@@ -459,6 +622,14 @@ class _Lane:
         if sl.occ_cols is not None:
             t._occ_traced = True
             t._occs.extend(float(o) for o in sl.occ_cols[b, :adv])
+        if self.journal is not None and t.jid is not None:
+            # durable slice boundary: sentinel-checked state only (the
+            # quarantine path above never persists), so recovery always
+            # resumes from a clean boundary
+            self.journal.record_commit(
+                t.jid, self.it_b[i], st, t._dispatches,
+                "".join(t._trace) if t._traced else None,
+                list(t._occs) if t._occ_traced else None)
         if t.cancelled:
             self._retire(i, now, "cancelled", stats)
         elif bool(sl.converged_b[b]):
@@ -520,32 +691,43 @@ class _Lane:
             stats.recovery_seconds += time.perf_counter() - t0
             return
         for i in active:
-            t = self.tickets[i]
-            try:
-                if injector is not None:
-                    injector.before_slice([t.id])
-                batch = get_graph_batch((self.roster[i],))
-                bctx = BatchedEdgeContext.create(
-                    batch, self.config, use_pallas=self.use_pallas,
-                    sparse_edge_capacity=self.cap, autotune=self.autotune)
-                packed = batch.pack_state_host(
-                    [self.states[i]], pad=self.program.state_pad)
-                packed = jax.tree.map(jnp.asarray, packed)
-                sl = run_batch_slice(
-                    self.program, batch, bctx, packed,
-                    np.asarray([self.it_b[i]], np.int32),
-                    np.asarray([False]),
-                    np.asarray([self.limit_b[i]], np.int32), slice_len)
-            except Exception as err:  # noqa: BLE001
-                self._quarantine(i, clock(), ExecutionFault(
-                    "slice_exception",
-                    {"ticket": t.id, "error": repr(err)}), stats)
-                continue
-            st = batch.unpack_state_host(sl.state)[0]
-            stats.record_slice(1, 1, sl.seconds)
-            self._commit_slot(i, 0, sl, st, prev[i], clock(), stats,
-                              sentinels, injector)
+            self._solo_advance(i, prev[i], slice_len, clock, stats,
+                               sentinels, injector)
         stats.recovery_seconds += time.perf_counter() - t0
+
+    def _solo_advance(self, i: int, prev, slice_len: int, clock,
+                      stats: GatewayStats, sentinels: bool,
+                      injector) -> None:
+        """Advance roster slot ``i`` alone in an isolated B=1 batch —
+        the shared tail of slice recovery and open-breaker degraded
+        routing.  Per-slot iteration counters make the solo slice
+        bit-identical to the packed one; a slot that fails even solo is
+        quarantined with the structured error."""
+        t = self.tickets[i]
+        try:
+            if injector is not None:
+                injector.before_slice([t.id])
+            batch = get_graph_batch((self.roster[i],))
+            bctx = BatchedEdgeContext.create(
+                batch, self.config, use_pallas=self.use_pallas,
+                sparse_edge_capacity=self.cap, autotune=self.autotune)
+            packed = batch.pack_state_host(
+                [self.states[i]], pad=self.program.state_pad)
+            packed = jax.tree.map(jnp.asarray, packed)
+            sl = run_batch_slice(
+                self.program, batch, bctx, packed,
+                np.asarray([self.it_b[i]], np.int32),
+                np.asarray([False]),
+                np.asarray([self.limit_b[i]], np.int32), slice_len)
+        except Exception as err:  # noqa: BLE001
+            self._quarantine(i, clock(), ExecutionFault(
+                "slice_exception",
+                {"ticket": t.id, "error": repr(err)}), stats)
+            return
+        st = batch.unpack_state_host(sl.state)[0]
+        stats.record_slice(1, 1, sl.seconds)
+        self._commit_slot(i, 0, sl, st, prev, clock(), stats,
+                          sentinels, injector)
 
     def _retire(self, i: int, now: float, outcome: str,
                 stats: GatewayStats) -> None:
@@ -565,6 +747,8 @@ class _Lane:
                 engine="gateway", dispatches=t._dispatches,
                 timed_out=(outcome == "timed_out")), None, now)
         stats.record_done(t, outcome)
+        if self.journal is not None and t.jid is not None:
+            self.journal.record_retire(t.jid, outcome)
 
     def _quarantine(self, i: int, now: float, err: ExecutionFault,
                     stats: GatewayStats) -> None:
@@ -576,6 +760,8 @@ class _Lane:
         t._finish(None, err, now)
         stats.quarantined += 1
         stats.record_done(t, "faulted")
+        if self.journal is not None and t.jid is not None:
+            self.journal.record_retire(t.jid, "faulted")
 
     def pending(self) -> bool:
         return bool(self.queue) or any(t is not None for t in self.tickets)
@@ -598,7 +784,9 @@ class ContinuousScheduler:
     def __init__(self, max_batch: int = 8, slice_len: int = 4,
                  max_queue: int = 256, clock=time.monotonic,
                  retry: Optional[RetryPolicy] = RetryPolicy(max_attempts=2),
-                 sentinels: bool = True, fault_injector=None):
+                 sentinels: bool = True, fault_injector=None,
+                 journal_dir=None, breaker_threshold: int = 3,
+                 breaker_cooldown: int = 4):
         if max_batch < 1 or slice_len < 1 or max_queue < 1:
             raise ValueError("max_batch, slice_len and max_queue must "
                              "be >= 1")
@@ -609,6 +797,12 @@ class ContinuousScheduler:
         self.retry = retry
         self.sentinels = bool(sentinels)
         self.fault_injector = fault_injector
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown = int(breaker_cooldown)
+        self.journal = None
+        if journal_dir is not None:
+            from repro.launch.journal import WriteAheadJournal
+            self.journal = WriteAheadJournal(journal_dir)
         self.stats = GatewayStats()
         self._lanes: Dict[tuple, _Lane] = {}
 
@@ -624,9 +818,12 @@ class ContinuousScheduler:
                autotune=None) -> Ticket:
         """Admit one query; returns its :class:`Ticket`.
 
-        Raises :class:`AdmissionError` for structurally invalid graphs
-        and :class:`GatewayBackpressure` when the waiting queue is
-        full — both *before* the request touches any lane state.
+        Raises :class:`AdmissionError` for structurally invalid graphs,
+        :class:`GatewayBackpressure` when the waiting queue is full,
+        and :class:`OverloadError` for a deadline-carrying request
+        whose projected queue delay already exceeds its ``deadline_s``
+        (deadline-aware load shedding) — all *before* the request
+        touches any lane state.
         """
         errors = validate_graph(graph)
         if errors:
@@ -637,6 +834,16 @@ class ContinuousScheduler:
             raise GatewayBackpressure(
                 f"{self.queued()} requests already queued "
                 f"(max_queue={self.max_queue})")
+        if deadline_s is not None:
+            delay = self.stats.projected_delay_s(self.queued(),
+                                                 self.max_batch)
+            if delay is not None and delay > deadline_s:
+                self.stats.shed += 1
+                raise OverloadError("overload_shed", {
+                    "projected_delay_s": delay,
+                    "deadline_s": float(deadline_s),
+                    "queued": self.queued(),
+                    "max_batch": self.max_batch})
         cap = (None if sparse_edge_capacity is None
                else int(sparse_edge_capacity))
         mode = _normalize_autotune(autotune)
@@ -645,12 +852,78 @@ class ContinuousScheduler:
         lane = self._lanes.get(lane_key)
         if lane is None:
             lane = self._lanes[lane_key] = _Lane(
-                program, config, bool(use_pallas), cap, mode)
+                program, config, bool(use_pallas), cap, mode,
+                journal=self.journal,
+                breaker=_Breaker(self.breaker_threshold,
+                                 self.breaker_cooldown))
         t = Ticket(program, graph, config, key, max_iters, deadline_s)
         t.enqueued_at = self.clock()
+        if self.journal is not None:
+            t.jid = self.journal.record_submit(
+                program, graph, config, key=key, max_iters=max_iters,
+                deadline_s=deadline_s,
+                knobs={"use_pallas": bool(use_pallas),
+                       "sparse_edge_capacity": cap, "autotune": mode})
         lane.queue.append(t)
         self.stats.record_submit(t)
         return t
+
+    def recover(self, journal_dir) -> List[Ticket]:
+        """Replay a write-ahead journal and re-admit every unfinished
+        ticket; returns the recovered tickets (in submit order).
+
+        Each recovered ticket resumes from its newest intact persisted
+        slice boundary (cold-restarts at iteration 0 when none
+        survives), with its graph rebuilt bit-identically from the
+        journal's graph store — so driving the recovered scheduler to
+        idle produces results bit-identical to the uninterrupted
+        gateway.  Replay appends nothing to the journal: recovering
+        twice from the same journal yields the same ticket set, states
+        and counters (idempotence).  ``deadline_s`` clocks restart at
+        recovery time — the dead gateway's wall-clock is meaningless
+        here.  Subsequent activity (admissions, commits, retirements,
+        new submissions) journals to ``journal_dir``.
+        """
+        from repro.launch.journal import WriteAheadJournal, _deserialize_key
+        from repro.algorithms import REGISTRY
+        self.journal = WriteAheadJournal(journal_dir)
+        for lane in self._lanes.values():
+            lane.journal = self.journal
+        programs: Dict[str, VertexProgram] = {}
+        recovered: List[Ticket] = []
+        for jid, rec in self.journal.unfinished().items():
+            sub = rec["submit"]
+            program = programs.setdefault(sub["program"],
+                                          REGISTRY[sub["program"]]())
+            graph = self.journal.load_graph(sub["graph"])
+            config = SystemConfig.from_name(sub["config"])
+            knobs = sub["knobs"]
+            t = Ticket(program, graph, config,
+                       _deserialize_key(sub["key"]), sub["max_iters"],
+                       sub["deadline_s"])
+            t.jid = jid
+            t.enqueued_at = self.clock()
+            cp, _ckpt_faults = self.journal.store_for(jid).load_latest()
+            if cp is not None:
+                meta = next((c for c in reversed(rec["commits"])
+                             if c["it"] == cp.it), {})
+                t._restore = (cp.state, cp.it, meta)
+            lane_key = (id(program), config, knobs["use_pallas"],
+                        knobs["sparse_edge_capacity"], knobs["autotune"],
+                        bucket_key(graph))
+            lane = self._lanes.get(lane_key)
+            if lane is None:
+                lane = self._lanes[lane_key] = _Lane(
+                    program, config, knobs["use_pallas"],
+                    knobs["sparse_edge_capacity"], knobs["autotune"],
+                    journal=self.journal,
+                    breaker=_Breaker(self.breaker_threshold,
+                                     self.breaker_cooldown))
+            lane.queue.append(t)
+            self.stats.record_submit(t)
+            self.stats.recovered_tickets += 1
+            recovered.append(t)
+        return recovered
 
     def poll(self) -> int:
         """One scheduling round; returns how many slices dispatched."""
@@ -695,12 +968,15 @@ class GraphGateway:
     def __init__(self, max_batch: int = 8, slice_len: int = 4,
                  max_queue: int = 256, clock=time.monotonic,
                  retry: Optional[RetryPolicy] = RetryPolicy(max_attempts=2),
-                 sentinels: bool = True, fault_injector=None):
-        self._sched = ContinuousScheduler(max_batch=max_batch,
-                                          slice_len=slice_len,
-                                          max_queue=max_queue, clock=clock,
-                                          retry=retry, sentinels=sentinels,
-                                          fault_injector=fault_injector)
+                 sentinels: bool = True, fault_injector=None,
+                 journal_dir=None, breaker_threshold: int = 3,
+                 breaker_cooldown: int = 4):
+        self._sched = ContinuousScheduler(
+            max_batch=max_batch, slice_len=slice_len, max_queue=max_queue,
+            clock=clock, retry=retry, sentinels=sentinels,
+            fault_injector=fault_injector, journal_dir=journal_dir,
+            breaker_threshold=breaker_threshold,
+            breaker_cooldown=breaker_cooldown)
         self._wake = threading.Condition()
         self._stop = False
         self._thread: Optional[threading.Thread] = None
@@ -741,6 +1017,18 @@ class GraphGateway:
             t._on_cancel = self._kick
             self._wake.notify_all()
             return t
+
+    def recover(self, journal_dir) -> List[Ticket]:
+        """Replay ``journal_dir``'s write-ahead journal and re-admit
+        every unfinished ticket (see
+        :meth:`ContinuousScheduler.recover`); wakes the worker so the
+        recovered work starts immediately."""
+        with self._wake:
+            tickets = self._sched.recover(journal_dir)
+            for t in tickets:
+                t._on_cancel = self._kick
+            self._wake.notify_all()
+            return tickets
 
     def stats(self) -> Dict[str, Any]:
         with self._wake:

@@ -44,15 +44,26 @@ import numpy as np
 
 from repro.core.resilience import FaultInjector
 
-__all__ = ["InjectedFault", "NaNFault", "BitFlipFault", "StaleUpdateFault",
-           "RunnerExceptionFault", "SparseOverflowFault", "CompileFault",
+__all__ = ["InjectedFault", "SimulatedProcessDeath", "NaNFault",
+           "BitFlipFault", "StaleUpdateFault", "RunnerExceptionFault",
+           "SparseOverflowFault", "CompileFault", "ProcessKillFault",
            "SliceFaultInjector", "SliceExceptionFault", "SliceNaNFault",
-           "FAULT_MODES", "make_fault"]
+           "GatewayKillFault", "FAULT_MODES", "make_fault"]
 
 
 class InjectedFault(RuntimeError):
     """The exception every forced-failure injector raises — tests can
     distinguish injected crashes from genuine bugs."""
+
+
+class SimulatedProcessDeath(BaseException):
+    """A process boundary, not a fault: deliberately a ``BaseException``
+    so it escapes *every* in-process recovery net (``run_resilient``'s
+    retry loop and the gateway's slice containment both catch
+    ``Exception`` only) exactly the way ``SIGKILL`` would.  The chaos
+    harness and crash-recovery tests catch it one frame above the
+    "process", then restart from durable state — anything the killed
+    process would have needed to survive must already be on disk."""
 
 
 def _copy_state(state):
@@ -204,6 +215,48 @@ class CompileFault(FaultInjector):
                 f"injected compile failure for engine={self.engine!r}")
 
 
+class ProcessKillFault(FaultInjector):
+    """Kill the process at/after ``at_iteration`` by raising
+    :class:`SimulatedProcessDeath` — the retry net cannot catch it, so
+    everything in memory (the :class:`~repro.core.resilience.
+    CheckpointRing` included) is lost.  Only state already spilled
+    through ``checkpoint_dir`` survives.
+
+    ``point`` picks the worst moment: ``"segment_start"`` dies before a
+    dispatch (the previous boundary is safely on disk — resume replays
+    nothing), ``"after_segment"`` dies after a segment executed but
+    *before* its boundary checkpoint was persisted — that segment's
+    work is genuinely lost and must be replayed on resume (the chaos
+    benchmark's lost-work measurement)."""
+
+    def __init__(self, at_iteration: int = 1, times: Optional[int] = 1,
+                 point: str = "segment_start"):
+        if point not in ("segment_start", "after_segment"):
+            raise ValueError(f"unknown kill point {point!r}")
+        self.at_iteration = at_iteration
+        self.times = times
+        self.point = point
+        self.fired = 0
+
+    def _maybe_kill(self, it):
+        if it < self.at_iteration:
+            return
+        if self.times is not None and self.fired >= self.times:
+            return
+        self.fired += 1
+        raise SimulatedProcessDeath(
+            f"simulated process death at iteration {it}")
+
+    def before_segment(self, it):
+        if self.point == "segment_start":
+            self._maybe_kill(it)
+
+    def perturb(self, it, state, checkpoint_state):
+        if self.point == "after_segment":
+            self._maybe_kill(it)
+        return None
+
+
 # ----------------------------------------------------------------------
 # gateway-side (continuous-batching slice) injectors
 
@@ -254,6 +307,31 @@ class SliceNaNFault(SliceFaultInjector):
         out[key].reshape(-1)[:1] = np.nan
         self.fired += 1
         return out
+
+
+class GatewayKillFault(SliceFaultInjector):
+    """Kill the gateway process before its ``n``-th slice dispatch
+    (counting across all lanes) via :class:`SimulatedProcessDeath`.
+    Every in-flight roster, parked slot and queue entry dies with it —
+    recovery must come entirely from the write-ahead journal and the
+    per-ticket checkpoint stores."""
+
+    def __init__(self, after_slices: int = 2, times: Optional[int] = 1):
+        self.after_slices = after_slices
+        self.times = times
+        self.fired = 0
+        self._slices = 0
+
+    def before_slice(self, ticket_ids: List[str]):
+        self._slices += 1
+        if self._slices <= self.after_slices:
+            return
+        if self.times is not None and self.fired >= self.times:
+            return
+        self.fired += 1
+        raise SimulatedProcessDeath(
+            f"simulated gateway death before slice {self._slices} "
+            f"(tickets={ticket_ids})")
 
 
 #: mode name -> injector factory (the fault-matrix test iterates this)

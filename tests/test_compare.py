@@ -62,6 +62,20 @@ def _resilience_artifact(efficiency=0.97, identical=True, recovery=1.3):
     }
 
 
+def _chaos_artifact(identical=True, lost_work=0.2, contained=True):
+    return {
+        "smoke": True,
+        "workload": {"core_app": "PR", "core_k": 4,
+                     "gateway_apps": ["BFS", "SSSP"]},
+        "core": {"bit_identical": identical,
+                 "lost_work_ratio": lost_work},
+        "gateway": {"apps": {a: {"bit_identical": identical}
+                             for a in ("BFS", "SSSP")},
+                    "lost_work_ratio": lost_work},
+        "overload": {"contained": contained},
+    }
+
+
 def _matrix_artifact(gain=1.4, source="synthetic"):
     return {
         "smoke": True,
@@ -155,6 +169,38 @@ class TestExtractAndCompare:
         assert compare_artifact("resilience", base,
                                 moved)["status"] == "incompatible"
 
+    def test_chaos_invariants_read_one_when_healthy(self):
+        m = extract_metrics("chaos", _chaos_artifact())
+        assert m == {
+            "chaos/core/identical": 1.0,
+            "chaos/core/lost_work_contained": 1.0,
+            "chaos/gateway/BFS/identical": 1.0,
+            "chaos/gateway/SSSP/identical": 1.0,
+            "chaos/gateway/lost_work_contained": 1.0,
+            "chaos/overload/contained": 1.0,
+        }
+        base = _chaos_artifact()
+        rep = compare_artifact("chaos", base, copy.deepcopy(base))
+        assert rep["status"] == "ok"
+        assert rep["geomean_ratio"] == pytest.approx(1.0)
+
+    def test_chaos_lost_identity_blows_the_gate(self):
+        # recovery wall-clock may drift freely, but a single lost
+        # bit-identity / containment invariant must fail unmissably
+        for broken in (_chaos_artifact(identical=False),
+                       _chaos_artifact(lost_work=1.0),
+                       _chaos_artifact(contained=False)):
+            rep = compare_artifact("chaos", _chaos_artifact(), broken)
+            assert rep["status"] == "regression"
+            assert rep["worst"][0][1] == pytest.approx(1e6)
+
+    def test_chaos_smoke_flag_pins_fingerprint(self):
+        base = _chaos_artifact()
+        full = _chaos_artifact()
+        full["smoke"] = False
+        assert compare_artifact("chaos", base, full)["status"] \
+            == "incompatible"
+
     def test_matrix_gain_regression_and_input_source_pinning(self):
         base = _matrix_artifact(gain=1.4)
         rep = compare_artifact("matrix", base,
@@ -222,6 +268,29 @@ class TestCompareDirs:
         changed["workloads"]["rmat"]["params"] = {"scale": 9}
         self._write(cur, "autotune", changed)
         assert compare_dirs(base, cur, ["autotune"]) == 2
+
+    def test_corrupt_baseline_exits_2_with_refresh_hint(
+            self, tmp_path, capsys):
+        """A truncated/corrupt baseline must FAIL actionably (name the
+        path and the --update-baselines procedure), not crash the gate
+        with an unhandled JSONDecodeError."""
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(cur, "dispatch", _dispatch_artifact())
+        base.mkdir()
+        (base / ARTIFACTS["dispatch"]).write_text('{"workload": tru')
+        assert compare_dirs(base, cur, ["dispatch"]) == 2
+        out = capsys.readouterr().out
+        assert "UNREADABLE baseline" in out
+        assert str(base / ARTIFACTS["dispatch"]) in out
+        assert "--update-baselines" in out
+
+    def test_corrupt_current_exits_2(self, tmp_path, capsys):
+        base, cur = tmp_path / "baselines", tmp_path / "results"
+        self._write(base, "dispatch", _dispatch_artifact())
+        cur.mkdir()
+        (cur / ARTIFACTS["dispatch"]).write_text("")
+        assert compare_dirs(base, cur, ["dispatch"]) == 2
+        assert "UNREADABLE current" in capsys.readouterr().out
 
     def test_update_baselines_copies(self, tmp_path):
         base, cur = tmp_path / "baselines", tmp_path / "results"

@@ -1,0 +1,198 @@
+"""Write-ahead journal: record/replay round trips, torn-line
+tolerance, graph persistence, and the replay-idempotence property —
+recovering the same journal twice yields the same ticket set, restore
+states and stats counters (replay appends nothing).
+"""
+import numpy as np
+import pytest
+
+from repro.algorithms import REGISTRY
+from repro.core import SystemConfig
+from repro.graph import rmat_batch, rmat_graph
+from repro.launch.journal import (JOURNAL_FILE, WriteAheadJournal,
+                                  graph_fingerprint)
+from repro.launch.serve import ContinuousScheduler
+from repro.testing.faults import GatewayKillFault, SimulatedProcessDeath
+
+
+def _graph(seed=5):
+    return rmat_graph(scale=6, edge_factor=8, seed=seed, weighted=True)
+
+
+def _states_equal(a, b):
+    return set(a) == set(b) and all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+def _killed_journal(tmp_path, n=4, after_slices=2):
+    """A journal left behind by a gateway killed mid-stream."""
+    program = REGISTRY["BFS"]()
+    config = SystemConfig.from_name("DG1")
+    pool = rmat_batch(2, 6, seed=9)
+    sched = ContinuousScheduler(
+        max_batch=2, slice_len=2, journal_dir=str(tmp_path),
+        fault_injector=GatewayKillFault(after_slices=after_slices))
+    tickets = [sched.submit(program, pool[i % 2], config)
+               for i in range(n)]
+    with pytest.raises(SimulatedProcessDeath):
+        sched.run_until_idle()
+    return tickets
+
+
+class TestJournalRecords:
+    def test_submit_commit_retire_round_trip(self, tmp_path):
+        j = WriteAheadJournal(tmp_path)
+        g = _graph()
+        program = REGISTRY["SSSP"]()
+        config = SystemConfig.from_name("TG0")
+        jid = j.record_submit(program, g, config, key=None, max_iters=50,
+                              deadline_s=2.5, knobs={"use_pallas": False})
+        j.record_admit(jid)
+        state = {"dist": np.arange(4, dtype=np.float32)}
+        j.record_commit(jid, 3, state, 2, "ST", [0.5, 0.25])
+        tickets, report = j.replay()
+        assert report["torn"] == 0 and report["orphan"] == 0
+        rec = tickets[jid]
+        assert rec["submit"]["program"] == "SSSP"
+        assert rec["submit"]["config"] == "TG0"
+        assert rec["submit"]["deadline_s"] == 2.5
+        assert rec["admitted"] and rec["retired"] is None
+        assert rec["commits"][0]["it"] == 3
+        assert rec["commits"][0]["trace"] == "ST"
+        cp, faults = j.store_for(jid).load_latest()
+        assert faults == [] and cp.it == 3
+        assert np.array_equal(cp.state["dist"], state["dist"])
+        j.record_retire(jid, "converged")
+        assert j.unfinished() == {}
+        # a retired ticket's checkpoint store is deleted
+        assert not (tmp_path / "tickets" / jid).exists()
+
+    def test_jids_survive_reopen(self, tmp_path):
+        j = WriteAheadJournal(tmp_path)
+        g = _graph()
+        program = REGISTRY["BFS"]()
+        config = SystemConfig.from_name("DG1")
+        first = j.record_submit(program, g, config, key=None,
+                                max_iters=None, deadline_s=None, knobs={})
+        j2 = WriteAheadJournal(tmp_path)
+        second = j2.record_submit(program, g, config, key=None,
+                                  max_iters=None, deadline_s=None,
+                                  knobs={})
+        assert first != second  # a reopened journal never reuses ids
+
+    def test_torn_final_line_skipped_not_fatal(self, tmp_path):
+        j = WriteAheadJournal(tmp_path)
+        g = _graph()
+        jid = j.record_submit(REGISTRY["BFS"](), g,
+                              SystemConfig.from_name("DG1"), key=None,
+                              max_iters=None, deadline_s=None, knobs={})
+        with open(tmp_path / JOURNAL_FILE, "a") as f:
+            f.write('deadbeef {"type": "retire", "jid"')  # torn write
+        tickets, report = j.replay()
+        assert report["torn"] == 1
+        assert tickets[jid]["retired"] is None  # the torn retire is void
+
+    def test_orphan_records_counted(self, tmp_path):
+        j = WriteAheadJournal(tmp_path)
+        j.record_admit("jid-99999999")
+        _, report = j.replay()
+        assert report["orphan"] == 1
+
+
+class TestGraphPersistence:
+    def test_round_trip_bit_identical(self, tmp_path):
+        j = WriteAheadJournal(tmp_path)
+        g = _graph()
+        fp = j.persist_graph(g)
+        # a fresh instance has a cold cache: forces the real disk path
+        g2 = WriteAheadJournal(tmp_path).load_graph(fp)
+        for name in ("src", "dst", "weight", "row_ptr_out", "row_ptr_in",
+                     "out_degree", "in_degree", "perm_owned"):
+            a, b = np.asarray(getattr(g, name)), np.asarray(
+                getattr(g2, name))
+            assert a.dtype == b.dtype and np.array_equal(a, b), name
+        assert (g2.n_nodes, g2.n_edges, g2.block_size) \
+            == (g.n_nodes, g.n_edges, g.block_size)
+        assert graph_fingerprint(g2) == fp
+
+    def test_identical_graphs_share_one_copy(self, tmp_path):
+        j = WriteAheadJournal(tmp_path)
+        fp1 = j.persist_graph(_graph(seed=5))
+        fp2 = j.persist_graph(_graph(seed=5))
+        fp3 = j.persist_graph(_graph(seed=6))
+        assert fp1 == fp2 and fp1 != fp3
+        assert len(list((tmp_path / "graphs").iterdir())) == 2
+
+    def test_loaded_graph_cached_per_fingerprint(self, tmp_path):
+        j = WriteAheadJournal(tmp_path)
+        fp = j.persist_graph(_graph())
+        j2 = WriteAheadJournal(tmp_path)
+        assert j2.load_graph(fp) is j2.load_graph(fp)
+
+
+class TestReplayIdempotence:
+    def test_recover_twice_yields_same_ticket_set(self, tmp_path):
+        """The satellite property: replay appends nothing, so two
+        recoveries of one journal see identical worlds."""
+        _killed_journal(tmp_path)
+        size_after_kill = (tmp_path / JOURNAL_FILE).stat().st_size
+
+        worlds = []
+        for _ in range(2):
+            sched = ContinuousScheduler(max_batch=2, slice_len=2)
+            recovered = sched.recover(str(tmp_path))
+            worlds.append({
+                "jids": [t.jid for t in recovered],
+                "restores": {
+                    t.jid: (t._restore[1] if t._restore else 0)
+                    for t in recovered},
+                "states": {
+                    t.jid: (t._restore[0] if t._restore else None)
+                    for t in recovered},
+                "recovered": sched.stats.recovered_tickets,
+                "submitted": sched.stats.submitted,
+            })
+        a, b = worlds
+        assert a["jids"] == b["jids"] and len(a["jids"]) > 0
+        assert a["restores"] == b["restores"]
+        assert a["recovered"] == b["recovered"]
+        assert a["submitted"] == b["submitted"]
+        for jid in a["states"]:
+            sa, sb = a["states"][jid], b["states"][jid]
+            assert (sa is None) == (sb is None)
+            if sa is not None:
+                assert _states_equal(sa, sb)
+        # recovery itself wrote nothing to the journal
+        assert (tmp_path / JOURNAL_FILE).stat().st_size == size_after_kill
+
+    def test_recover_then_drain_then_recover_is_empty(self, tmp_path):
+        _killed_journal(tmp_path)
+        sched = ContinuousScheduler(max_batch=2, slice_len=2,
+                                    journal_dir=str(tmp_path))
+        recovered = sched.recover(str(tmp_path))
+        assert recovered
+        sched.run_until_idle()
+        assert all(t.done() for t in recovered)
+        # every ticket retired through the journal: nothing left
+        assert ContinuousScheduler(max_batch=2, slice_len=2) \
+            .recover(str(tmp_path)) == []
+
+    def test_recovered_results_bit_identical_to_uninterrupted(
+            self, tmp_path):
+        program = REGISTRY["BFS"]()
+        config = SystemConfig.from_name("DG1")
+        pool = rmat_batch(2, 6, seed=9)
+        ref = ContinuousScheduler(max_batch=2, slice_len=2)
+        ref_tickets = [ref.submit(program, pool[i % 2], config)
+                       for i in range(4)]
+        ref.run_until_idle()
+
+        killed = _killed_journal(tmp_path)
+        fresh = ContinuousScheduler(max_batch=2, slice_len=2)
+        recovered = fresh.recover(str(tmp_path))
+        fresh.run_until_idle()
+        by_jid = {t.jid: t for t in killed if t.done()}
+        by_jid.update({t.jid: t for t in recovered})
+        for rt, kt in zip(ref_tickets, sorted(by_jid)):
+            assert _states_equal(rt.result(0).state,
+                                 by_jid[kt].result(0).state)

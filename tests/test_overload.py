@@ -1,0 +1,257 @@
+"""Overload robustness: deadline-aware load shedding, the per-lane
+circuit breaker (open → solo-degraded → half-open probe → close, bit-
+identical throughout), and the cancel-vs-retirement race property.
+"""
+import numpy as np
+import pytest
+
+from repro.algorithms import REGISTRY
+from repro.core import SystemConfig
+from repro.graph import rmat_graph
+from repro.launch.serve import (CancelledError, ContinuousScheduler,
+                                GatewayStats, OverloadError, Ticket,
+                                _Breaker)
+from repro.testing.faults import InjectedFault, SliceFaultInjector
+
+
+def _graph(seed=3):
+    return rmat_graph(scale=6, edge_factor=8, seed=seed, weighted=False)
+
+
+def _states_equal(a, b):
+    return set(a) == set(b) and all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+class PackedOnlyFault(SliceFaultInjector):
+    """Fail packed-roster slices only — solo (B=1) slices succeed.
+    The breaker's reason to exist: a cohabitation-triggered failure
+    that isolation routes around."""
+
+    def __init__(self, times=None):
+        self.times = times
+        self.fired = 0
+
+    def before_slice(self, ticket_ids):
+        if len(ticket_ids) < 2:
+            return
+        if self.times is not None and self.fired >= self.times:
+            return
+        self.fired += 1
+        raise InjectedFault(f"packed cohabitation failure "
+                            f"(tickets={ticket_ids})")
+
+
+# ---------------------------------------------------------------------------
+class TestShedding:
+    def _loaded(self, latencies=(1.0, 1.0)):
+        sched = ContinuousScheduler(max_batch=2, slice_len=2)
+        sched.stats.latencies_s.extend(latencies)
+        program = REGISTRY["BFS"]()
+        config = SystemConfig.from_name("DG1")
+        g = _graph()
+        return sched, program, config, g
+
+    def test_hopeless_deadline_is_shed(self):
+        sched, program, config, g = self._loaded()
+        for _ in range(4):  # two full waves already waiting
+            sched.submit(program, g, config)
+        with pytest.raises(OverloadError) as ei:
+            sched.submit(program, g, config, deadline_s=0.5)
+        assert ei.value.code == "overload_shed"
+        assert ei.value.detail["projected_delay_s"] > 0.5
+        assert ei.value.detail["queued"] == 4
+        assert sched.stats.shed == 1
+        assert sched.stats.snapshot()["shed"] == 1
+
+    def test_feasible_deadline_is_admitted(self):
+        sched, program, config, g = self._loaded()
+        for _ in range(4):
+            sched.submit(program, g, config)
+        t = sched.submit(program, g, config, deadline_s=100.0)
+        assert t is not None and sched.stats.shed == 0
+
+    def test_no_deadline_never_shed(self):
+        sched, program, config, g = self._loaded(latencies=(50.0,))
+        for _ in range(8):
+            sched.submit(program, g, config)  # arbitrarily deep queue
+        assert sched.stats.shed == 0
+
+    def test_cold_gateway_never_sheds(self):
+        # no completions yet -> no projection -> no shedding, however
+        # tight the deadline
+        sched = ContinuousScheduler(max_batch=2, slice_len=2)
+        program = REGISTRY["BFS"]()
+        config = SystemConfig.from_name("DG1")
+        g = _graph()
+        for _ in range(6):
+            sched.submit(program, g, config, deadline_s=1e-9)
+        assert sched.stats.shed == 0
+
+    def test_projection_math(self):
+        s = GatewayStats()
+        assert s.projected_delay_s(0, 4) is None
+        s.latencies_s.extend([2.0, 4.0])       # mean 3.0
+        assert s.projected_delay_s(0, 4) == 3.0    # next wave
+        assert s.projected_delay_s(7, 4) == 6.0    # one full wave ahead
+        assert s.projected_delay_s(8, 4) == 9.0
+
+    def test_shed_request_leaves_no_lane_state(self):
+        sched, program, config, g = self._loaded()
+        for _ in range(4):
+            sched.submit(program, g, config)
+        queued_before = sched.queued()
+        with pytest.raises(OverloadError):
+            sched.submit(program, g, config, deadline_s=1e-9)
+        assert sched.queued() == queued_before
+        sched.run_until_idle()  # the shed submit poisoned nothing
+        assert sched.stats.converged == 4
+
+
+# ---------------------------------------------------------------------------
+class TestBreakerUnit:
+    def test_state_machine_walk(self):
+        stats = GatewayStats()
+        b = _Breaker(threshold=2, cooldown=2)
+        assert b.route() == "packed"
+        b.record_fault(stats)
+        assert b.state == "closed"       # one strike is not an outage
+        b.record_fault(stats)
+        assert b.state == "open" and b.route() == "solo"
+        assert stats.breaker_opens == 1
+        b.tick(stats)
+        assert b.route() == "solo"       # still cooling
+        b.tick(stats)
+        assert b.state == "half_open" and b.route() == "probe"
+        b.record_clean(stats)
+        assert b.state == "closed" and stats.breaker_closes == 1
+
+    def test_faulty_probe_reopens(self):
+        stats = GatewayStats()
+        b = _Breaker(threshold=1, cooldown=1)
+        b.record_fault(stats)
+        b.tick(stats)
+        assert b.state == "half_open"
+        b.record_fault(stats)            # probe failed
+        assert b.state == "open" and stats.breaker_opens == 2
+
+    def test_clean_slice_resets_consecutive_count(self):
+        stats = GatewayStats()
+        b = _Breaker(threshold=2, cooldown=2)
+        b.record_fault(stats)
+        b.record_clean(stats)            # intermittent, not consecutive
+        b.record_fault(stats)
+        assert b.state == "closed"
+
+    def test_rejects_degenerate_params(self):
+        with pytest.raises(ValueError):
+            _Breaker(threshold=0)
+        with pytest.raises(ValueError):
+            _Breaker(cooldown=0)
+
+
+class TestBreakerIntegration:
+    def test_packed_fault_opens_breaker_and_degrades_solo(self):
+        # SSSP with 1-iteration slices: enough dispatch rounds remain
+        # after the breaker opens for the solo-degraded routing (and
+        # the half-open probe) to actually run
+        program = REGISTRY["SSSP"]()
+        config = SystemConfig.from_name("DG1")
+        graphs = [rmat_graph(scale=7, edge_factor=8, seed=s,
+                             weighted=True) for s in (3, 4, 5, 6)]
+
+        clean = ContinuousScheduler(max_batch=4, slice_len=1)
+        ref = [clean.submit(program, g, config) for g in graphs]
+        clean.run_until_idle()
+
+        sched = ContinuousScheduler(
+            max_batch=4, slice_len=1, breaker_threshold=2,
+            breaker_cooldown=2, fault_injector=PackedOnlyFault())
+        tickets = [sched.submit(program, g, config) for g in graphs]
+        sched.run_until_idle()
+
+        s = sched.stats
+        assert s.breaker_opens >= 1       # packed faults tripped it
+        assert s.solo_degraded_slices > 0  # open => isolated B=1 routing
+        assert s.quarantined == 0          # degraded, never sacrificed
+        for rt, t in zip(ref, tickets):
+            assert t.result(0).converged
+            assert _states_equal(rt.result(0).state, t.result(0).state)
+
+    def test_breaker_closes_after_fault_clears(self):
+        program = REGISTRY["SSSP"]()
+        config = SystemConfig.from_name("DG1")
+        graphs = [rmat_graph(scale=7, edge_factor=8, seed=s,
+                             weighted=True) for s in (3, 4, 5, 6)]
+        # the fault burns out after enough packed failures to open the
+        # breaker once (3 raises: dispatch + its in-recovery whole-
+        # roster retry, then the next dispatch), so the eventual
+        # half-open probe runs clean; 1-iteration slices + a short
+        # cooldown leave work for the probe to run on
+        sched = ContinuousScheduler(
+            max_batch=4, slice_len=1, breaker_threshold=2,
+            breaker_cooldown=1, fault_injector=PackedOnlyFault(times=3))
+        tickets = [sched.submit(program, g, config) for g in graphs]
+        sched.run_until_idle()
+        s = sched.stats
+        assert s.breaker_opens == 1
+        assert s.breaker_probes >= 1
+        assert s.breaker_closes == 1       # recovered to packed routing
+        assert all(t.result(0).converged for t in tickets)
+
+    def test_breaker_counters_in_snapshot(self):
+        snap = ContinuousScheduler().stats.snapshot()
+        for key in ("breaker_opens", "breaker_closes", "breaker_probes",
+                    "solo_degraded_slices", "shed", "recovered_tickets"):
+            assert snap[key] == 0
+
+
+# ---------------------------------------------------------------------------
+class TestCancelRetirementRace:
+    def test_cancel_racing_retirement_property(self, monkeypatch):
+        """Seeded interleavings of ``cancel()`` against slot
+        retirement: whatever wins, every ticket finishes exactly once
+        and ``result()`` never deadlocks."""
+        finishes = {}
+        orig = Ticket._finish
+
+        def counting_finish(self, result, error, now):
+            finishes[self.id] = finishes.get(self.id, 0) + 1
+            orig(self, result, error, now)
+
+        monkeypatch.setattr(Ticket, "_finish", counting_finish)
+
+        program = REGISTRY["BFS"]()
+        config = SystemConfig.from_name("DG1")
+        graphs = [_graph(seed=s) for s in (3, 4)]
+        for seed in range(8):
+            rng = np.random.default_rng(seed)
+            finishes.clear()
+            sched = ContinuousScheduler(max_batch=2, slice_len=1)
+            tickets = [sched.submit(program, graphs[i % 2], config)
+                       for i in range(4)]
+            # one victim cancelled at a random poll boundary — from
+            # "still queued" through "about to retire" to "already done"
+            victim = tickets[int(rng.integers(len(tickets)))]
+            cancel_at = int(rng.integers(12))
+            for round_ in range(10_000):
+                if round_ == cancel_at:
+                    victim.cancel()
+                    victim.cancel()     # double-cancel must be a no-op
+                if not sched.pending():
+                    break
+                sched.poll()
+            if victim.cancelled and not victim.done():
+                sched.poll()            # queued-cancel needs one round
+            for t in tickets:
+                assert t.done(), (seed, t.id)      # no deadlock
+                assert finishes[t.id] == 1, (seed, t.id)  # exactly once
+                if t is victim and t.cancelled and t._error is not None:
+                    with pytest.raises(CancelledError):
+                        t.result(0)
+                else:
+                    assert t.result(0).converged
+            # the lane's accounting agrees with the ticket's terminal
+            # state: no slot both cancelled and completed
+            s = sched.stats
+            assert s.cancelled + s.completed == len(tickets)

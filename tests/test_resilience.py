@@ -222,8 +222,10 @@ class TestCheckpointRing:
                           dir_buf=None, occ_buf=None)
 
     def test_capacity_validation(self):
-        with pytest.raises(ValueError):
-            CheckpointRing(0)
+        # the message must name the offending argument and its value
+        for bad in (0, -3):
+            with pytest.raises(ValueError, match=f"capacity.*{bad}"):
+                CheckpointRing(bad)
 
     def test_pinned_first_survives_wraparound(self):
         ring = CheckpointRing(capacity=3)
