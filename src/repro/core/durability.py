@@ -24,7 +24,8 @@ File format (one file per checkpoint generation, ``ckpt-<seq>.rck``)::
 
 Every hazard a crash can leave behind is detected at *load*, not at
 use: a truncated file fails the length check, a bit-flipped byte fails
-the digest, a stale directory from a different (program, config, graph)
+the digest, a stale directory from a different run — different program,
+config, graph *content* (SHA-256 over every array) or PRNG key —
 fails the fingerprint — each rejected with a structured
 :class:`~repro.core.resilience.ExecutionFault` (``code=
 "corrupt_checkpoint"`` / ``"checkpoint_mismatch"``).  Recovery then
@@ -37,7 +38,8 @@ Writes are atomic (write to a ``.tmp-`` sibling, fsync, then
 ``os.replace``), so a kill mid-write can only ever lose the checkpoint
 being written — the previous generation stays intact.  The store
 prunes itself to ``keep`` generations, always pinning the oldest
-(initial) one, mirroring the in-memory ring's cold-restart floor.
+(initial) one — mirroring the in-memory ring's cold-restart floor —
+and always retaining the newest one, the resume point.
 
 The serving gateway's write-ahead journal (:mod:`repro.launch.journal`)
 reuses this store per ticket: each slice commit persists the ticket's
@@ -110,12 +112,16 @@ class CheckpointStore:
     """Durable, self-verifying checkpoint generations under one directory.
 
     ``fingerprint`` identifies the run the checkpoints belong to (the
-    resilience layer passes program name, config name and graph shape);
-    a generation written under a different fingerprint is rejected at
-    load with ``code="checkpoint_mismatch"`` — a reused directory can
-    therefore never resume the wrong run.  ``keep`` bounds how many
-    generations stay on disk: the oldest (initial) generation is pinned
-    as the cold-restart floor, the ``keep - 1`` newest ride along.
+    resilience layer passes program name, config name, graph shape, a
+    content SHA-256 over every graph array, and the serialized PRNG
+    key — so a same-shape graph with different edges/weights, or a
+    rerun under a different key, never matches); a generation written
+    under a different fingerprint is rejected at load with
+    ``code="checkpoint_mismatch"`` — a reused directory can therefore
+    never resume the wrong run.  ``keep`` bounds how many generations
+    stay on disk: the oldest (initial) generation is pinned as the
+    cold-restart floor and the newest is always retained as the resume
+    point (even with ``keep=1``), the rest rotate out.
     """
 
     def __init__(self, root, keep: int = DEFAULT_RING_CAPACITY,
@@ -157,9 +163,14 @@ class CheckpointStore:
         gens = self.generations()          # newest first
         if len(gens) <= self.keep:
             return
-        pinned = gens[-1]                  # oldest = the initial snapshot
+        # the newest generation (the resume point — possibly the file
+        # just saved) and the oldest (the initial cold-restart floor)
+        # are both unconditionally retained: with keep=1 this store
+        # holds two files rather than deleting the checkpoint it just
+        # wrote and degrading every resume to a cold restart
+        pinned = {gens[0], gens[-1]}
         for path in gens[self.keep - 1:]:
-            if path != pinned:
+            if path not in pinned:
                 path.unlink(missing_ok=True)
 
     # -- read -----------------------------------------------------------

@@ -607,11 +607,19 @@ def run_resilient(program: VertexProgram, graph: Graph,
     ring = CheckpointRing(capacity)
     if checkpoint_dir is not None:
         from repro.core.durability import CheckpointStore
+        from repro.launch.journal import _serialize_key, graph_fingerprint
+        # the fingerprint must pin everything the resumed state depends
+        # on: names and shapes alone let a same-shape graph with
+        # different edges/weights (or a rerun under a different PRNG
+        # key) silently adopt the wrong run's checkpoints, so the graph
+        # is identified by content hash and the key rides along verbatim
         store = CheckpointStore(
             checkpoint_dir, keep=capacity,
             fingerprint={"program": program.name, "config": config.name,
                          "n_nodes": int(graph.n_nodes),
                          "n_edges": int(graph.n_edges),
+                         "graph_sha256": graph_fingerprint(graph),
+                         "key": _serialize_key(key),
                          "limit": int(limit), "k": int(K)})
         disk_cps, disk_faults = store.load_all()
         faults.extend(disk_faults)

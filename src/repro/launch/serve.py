@@ -216,6 +216,11 @@ class GatewayStats:
     schema documented in docs/ARCHITECTURE.md and exported by
     ``benchmarks/serve.py``.
     """
+    #: service-time samples kept for the shedding projection — bounded
+    #: so one congestion episode ages out instead of biasing admission
+    #: forever
+    SERVICE_WINDOW = 32
+
     submitted: int = 0
     admitted: int = 0
     completed: int = 0
@@ -239,6 +244,7 @@ class GatewayStats:
     dispatch_seconds: float = 0.0
     recovery_seconds: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    service_times_s: List[float] = dataclasses.field(default_factory=list)
     queue_delays_s: List[float] = dataclasses.field(default_factory=list)
     occupancy: List[float] = dataclasses.field(default_factory=list)
     requests: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
@@ -268,6 +274,9 @@ class GatewayStats:
         self.last_complete_at = t.completed_at
         if outcome != "cancelled":
             self.latencies_s.append(t.completed_at - t.enqueued_at)
+            if t.admitted_at is not None:
+                self.service_times_s.append(t.completed_at - t.admitted_at)
+                del self.service_times_s[:-self.SERVICE_WINDOW]
         if t.admitted_at is not None:
             self.queue_delays_s.append(t.admitted_at - t.enqueued_at)
         self.requests.append({
@@ -284,15 +293,20 @@ class GatewayStats:
 
     def projected_delay_s(self, queued_ahead: int,
                           max_batch: int) -> Optional[float]:
-        """Projected queue delay for a request arriving behind
-        ``queued_ahead`` waiting requests: full admission waves ahead of
-        it × the observed mean end-to-end service time.  ``None`` until
-        at least one request has completed — a cold gateway never sheds
-        on a projection it has no data for."""
-        if not self.latencies_s:
+        """Projected delay until a request arriving behind
+        ``queued_ahead`` waiting requests would finish: full admission
+        waves (its own included) × the observed mean *service* time —
+        ``completed_at - admitted_at``, over the newest
+        ``SERVICE_WINDOW`` completions.  Queue wait is deliberately
+        excluded and the window bounded, so a past congestion episode
+        cannot inflate the projection and keep shedding requests after
+        the queue has drained.  ``None`` until at least one admitted
+        request has completed — a cold gateway never sheds on a
+        projection it has no data for."""
+        if not self.service_times_s:
             return None
         waves = (queued_ahead + max_batch) // max_batch
-        return waves * float(np.mean(self.latencies_s))
+        return waves * float(np.mean(self.service_times_s))
 
     def snapshot(self) -> Dict[str, Any]:
         """One JSON-able summary dict (the serving metrics schema)."""
@@ -883,15 +897,29 @@ class ContinuousScheduler:
         recovery time — the dead gateway's wall-clock is meaningless
         here.  Subsequent activity (admissions, commits, retirements,
         new submissions) journals to ``journal_dir``.
+
+        Tickets already live in this process are never re-admitted: a
+        scheduler constructed with ``journal_dir=X`` that then calls
+        ``recover(X)`` (or calls ``recover`` twice) sees its own
+        unfinished submissions in the journal, and replaying them would
+        put two :class:`Ticket` objects on one jid — both executing,
+        commits interleaving under the same checkpoint store.  Such
+        jids are skipped; only tickets with no live counterpart are
+        rebuilt.
         """
         from repro.launch.journal import WriteAheadJournal, _deserialize_key
         from repro.algorithms import REGISTRY
         self.journal = WriteAheadJournal(journal_dir)
         for lane in self._lanes.values():
             lane.journal = self.journal
+        live_jids = {t.jid for lane in self._lanes.values()
+                     for t in [*lane.queue, *lane.tickets]
+                     if t is not None and t.jid is not None}
         programs: Dict[str, VertexProgram] = {}
         recovered: List[Ticket] = []
         for jid, rec in self.journal.unfinished().items():
+            if jid in live_jids:
+                continue
             sub = rec["submit"]
             program = programs.setdefault(sub["program"],
                                           REGISTRY[sub["program"]]())

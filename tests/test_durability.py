@@ -60,6 +60,18 @@ class TestStoreFormat:
         with pytest.raises(ValueError, match="keep"):
             CheckpointStore(tmp_path, keep=0)
 
+    def test_keep_one_still_resumes_from_newest(self, tmp_path):
+        # keep=1 must never prune away the checkpoint just saved —
+        # that would silently degrade every resume to a cold restart
+        store = CheckpointStore(tmp_path, keep=1)
+        for it in range(5):
+            store.save(_cp(it, float(it)))
+        cp, faults = store.load_latest()
+        assert faults == [] and cp.it == 4
+        # the initial generation survives too (cold-restart floor)
+        cps, _ = store.load_all()
+        assert [c.it for c in cps] == [0, 4]
+
     def test_atomic_no_tmp_left_behind(self, tmp_path):
         store = CheckpointStore(tmp_path)
         store.save(_cp(1))
@@ -190,6 +202,59 @@ class TestDurableRun:
         # the corruption is surfaced in the fault history, not hidden
         hist = (resumed.fault or {}).get("history", [])
         assert any(h.get("kind") == "corrupt_checkpoint" for h in hist)
+
+    def test_same_shape_different_graph_never_resumes(self, tmp_path):
+        # the fingerprint covers graph *content*, not just shape: a
+        # reused checkpoint_dir holding a killed run on graph A must
+        # cold-restart (checkpoint_mismatch), never adopt A's state,
+        # when pointed at a same-shape graph B with different weights
+        g = rmat_graph(scale=7, edge_factor=8, seed=11, weighted=True)
+        program = REGISTRY["SSSP"]()
+        config = SystemConfig.from_name("DG1")
+        clean_a = run(program, g, config, checkpoint_every=4)
+        with pytest.raises(SimulatedProcessDeath):
+            run(program, g, config, checkpoint_every=4,
+                checkpoint_dir=str(tmp_path),
+                fault_injector=ProcessKillFault(
+                    at_iteration=max(4, clean_a.iterations - 4),
+                    point="after_segment"))
+        import dataclasses
+        g2 = dataclasses.replace(
+            g, weight=np.asarray(g.weight) * 2.0,
+            weight_in=np.asarray(g.weight_in) * 2.0)
+        clean_b = run(program, g2, config, checkpoint_every=4)
+        resumed = run(program, g2, config, checkpoint_every=4,
+                      checkpoint_dir=str(tmp_path))
+        assert resumed.converged
+        assert _states_equal(clean_b.state, resumed.state)
+        hist = (resumed.fault or {}).get("history", [])
+        assert any(h.get("kind") == "checkpoint_mismatch" for h in hist)
+
+    def test_different_key_never_resumes(self, tmp_path):
+        # same program/config/graph, different PRNG key: the killed
+        # run's checkpoints must be rejected, not silently adopted
+        import jax
+        g = _graph()
+        program = REGISTRY["MIS"]()
+        config = SystemConfig.from_name("DG1")
+        k1, k2 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+        # MIS settles in a handful of rounds: checkpoint every
+        # iteration and kill after the first so a mid-run boundary
+        # really lands on disk before the death
+        clean1 = run(program, g, config, key=k1, checkpoint_every=1)
+        assert clean1.iterations >= 2
+        with pytest.raises(SimulatedProcessDeath):
+            run(program, g, config, key=k1, checkpoint_every=1,
+                checkpoint_dir=str(tmp_path),
+                fault_injector=ProcessKillFault(
+                    at_iteration=1, point="after_segment"))
+        clean2 = run(program, g, config, key=k2, checkpoint_every=1)
+        resumed = run(program, g, config, key=k2, checkpoint_every=1,
+                      checkpoint_dir=str(tmp_path))
+        assert resumed.converged
+        assert _states_equal(clean2.state, resumed.state)
+        hist = (resumed.fault or {}).get("history", [])
+        assert any(h.get("kind") == "checkpoint_mismatch" for h in hist)
 
     def test_kill_then_resume_replays_only_lost_segment(self, tmp_path):
         g = _graph()

@@ -177,6 +177,31 @@ class TestReplayIdempotence:
         assert ContinuousScheduler(max_batch=2, slice_len=2) \
             .recover(str(tmp_path)) == []
 
+    def test_recover_skips_tickets_already_live(self, tmp_path):
+        """A scheduler journaling to X that calls ``recover(X)`` must
+        not duplicate its own live submissions — one jid, one Ticket."""
+        _killed_journal(tmp_path)
+        program = REGISTRY["BFS"]()
+        config = SystemConfig.from_name("DG1")
+        sched = ContinuousScheduler(max_batch=2, slice_len=2,
+                                    journal_dir=str(tmp_path))
+        live = sched.submit(program, _graph(seed=7), config)
+        assert live.jid is not None
+        recovered = sched.recover(str(tmp_path))
+        assert recovered                      # the killed tickets return
+        assert live.jid not in {t.jid for t in recovered}
+        # recovering again with everything live re-admits nothing
+        assert sched.recover(str(tmp_path)) == []
+        jids = [t.jid for lane in sched._lanes.values()
+                for t in [*lane.queue, *lane.tickets]
+                if t is not None and t.jid is not None]
+        assert len(jids) == len(set(jids))    # no jid held twice
+        sched.run_until_idle()
+        assert live.done() and all(t.done() for t in recovered)
+        # every ticket retired exactly once: the journal is now empty
+        assert ContinuousScheduler(max_batch=2, slice_len=2) \
+            .recover(str(tmp_path)) == []
+
     def test_recovered_results_bit_identical_to_uninterrupted(
             self, tmp_path):
         program = REGISTRY["BFS"]()

@@ -44,9 +44,9 @@ class PackedOnlyFault(SliceFaultInjector):
 
 # ---------------------------------------------------------------------------
 class TestShedding:
-    def _loaded(self, latencies=(1.0, 1.0)):
+    def _loaded(self, service_times=(1.0, 1.0)):
         sched = ContinuousScheduler(max_batch=2, slice_len=2)
-        sched.stats.latencies_s.extend(latencies)
+        sched.stats.service_times_s.extend(service_times)
         program = REGISTRY["BFS"]()
         config = SystemConfig.from_name("DG1")
         g = _graph()
@@ -72,7 +72,7 @@ class TestShedding:
         assert t is not None and sched.stats.shed == 0
 
     def test_no_deadline_never_shed(self):
-        sched, program, config, g = self._loaded(latencies=(50.0,))
+        sched, program, config, g = self._loaded(service_times=(50.0,))
         for _ in range(8):
             sched.submit(program, g, config)  # arbitrarily deep queue
         assert sched.stats.shed == 0
@@ -91,10 +91,42 @@ class TestShedding:
     def test_projection_math(self):
         s = GatewayStats()
         assert s.projected_delay_s(0, 4) is None
-        s.latencies_s.extend([2.0, 4.0])       # mean 3.0
+        s.service_times_s.extend([2.0, 4.0])   # mean 3.0
         assert s.projected_delay_s(0, 4) == 3.0    # next wave
         assert s.projected_delay_s(7, 4) == 6.0    # one full wave ahead
         assert s.projected_delay_s(8, 4) == 9.0
+
+    def test_projection_ignores_queue_wait(self):
+        # a past congestion episode leaves huge *end-to-end* latencies
+        # behind; the projection must be built from service time alone,
+        # or the gateway keeps shedding long after the queue drained
+        s = GatewayStats()
+        t = Ticket(None, None, None, None, None, None)
+        t.enqueued_at, t.admitted_at = 0.0, 99.0   # 99 s stuck queued
+        t.completed_at = 100.0                     # 1 s of actual work
+        s.record_done(t, "converged")
+        assert s.latencies_s == [100.0]
+        assert s.projected_delay_s(0, 4) == 1.0
+
+    def test_service_window_is_bounded(self):
+        s = GatewayStats()
+        n = GatewayStats.SERVICE_WINDOW + 8
+        for i in range(n):
+            t = Ticket(None, None, None, None, None, None)
+            t.enqueued_at = t.admitted_at = float(i)
+            t.completed_at = float(i) + (100.0 if i < 8 else 1.0)
+            s.record_done(t, "converged")
+        assert len(s.service_times_s) == GatewayStats.SERVICE_WINDOW
+        assert len(s.latencies_s) == n     # observability keeps it all
+        # the early 100 s outliers aged out of the projection entirely
+        assert s.projected_delay_s(0, 4) == 1.0
+
+    def test_post_congestion_queue_drained_admits_again(self):
+        sched, program, config, g = self._loaded(service_times=(0.1,))
+        sched.stats.latencies_s.extend([50.0] * 8)  # congestion scars
+        assert sched.queued() == 0
+        t = sched.submit(program, g, config, deadline_s=1.0)
+        assert t is not None and sched.stats.shed == 0
 
     def test_shed_request_leaves_no_lane_state(self):
         sched, program, config, g = self._loaded()
