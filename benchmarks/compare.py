@@ -1,11 +1,12 @@
 """CI perf-regression gate over the tracked benchmark artifacts.
 
 Diffs the current
-``results/BENCH_{dispatch,autotune,batch,matrix,serve,resilience,chaos}.json``
-against
+``results/BENCH_{dispatch,autotune,batch,matrix,serve,resilience,chaos,
+specialize}.json`` against
 committed baselines under ``results/baselines/`` and **fails** (exit 1)
 when an artifact's geomean regression exceeds the threshold
-(default 20%).
+(default 20%).  docs/BENCHMARKS.md documents every artifact, its gate
+metrics and the refresh workflow.
 
 What is compared: the **within-run speedup ratios** each artifact
 records — fused-vs-host per config (dispatch), tuned-vs-default per
@@ -15,7 +16,8 @@ gateway-vs-serial-server throughput and p99 ratios per arrival mode
 (serve), plain-vs-checkpointed efficiency plus cold-vs-warm recovery
 speedup and per-config bit-identity (resilience), crash-recovery
 bit-identity / lost-work containment / overload containment as
-1.0-vs-1e-6 invariants (chaos) — *not* absolute
+1.0-vs-1e-6 invariants (chaos), learned-specializer accuracy and
+e2e-vs-always-X invariants (specialize) — *not* absolute
 microseconds.  Ratios are measured
 against a same-machine denominator, so a baseline recorded on one
 machine remains meaningful on a differently-provisioned CI runner;
@@ -57,6 +59,7 @@ ARTIFACTS = {
     "serve": "BENCH_serve.json",
     "resilience": "BENCH_resilience.json",
     "chaos": "BENCH_chaos.json",
+    "specialize": "BENCH_specialize.json",
 }
 DEFAULT_THRESHOLD = 0.20
 
@@ -82,6 +85,13 @@ SERVE_CAPS = {
 #: purpose: any config losing it drives its ratio through the roof.
 RESILIENCE_EFFICIENCY_CAP = 0.90
 RESILIENCE_RECOVERY_CAP = 1.1
+
+#: the learned specializer's e2e advantage over the best single-config
+#: policy is clamped at break-even + margin: the >= 1.0x acceptance
+#: bound is enforced by the ``e2e_ge_best_always`` invariant, and
+#: headroom above it varies with which cells the fresh matrix measured
+#: fastest — not something to hold future runs to
+SPECIALIZE_CAP = 1.05
 
 
 def extract_metrics(kind: str, data: dict) -> dict:
@@ -143,6 +153,31 @@ def extract_metrics(kind: str, data: dict) -> dict:
         if ov:
             out["chaos/overload/contained"] = (
                 1.0 if ov.get("contained") else 1e-6)
+    elif kind == "specialize":
+        # the two acceptance invariants as 1.0-vs-1e-6 metrics (the
+        # chaos idiom): the learned model must pick at least as well as
+        # the static partial tree, and its e2e geomean must beat every
+        # always-one-config policy
+        acc = data.get("accuracy", {})
+        gate = data.get("gate", {})
+        if gate:
+            out["specialize/accuracy_ge_partial"] = (
+                1.0 if gate.get("accuracy_ge_partial") else 1e-6)
+            out["specialize/e2e_ge_best_always"] = (
+                1.0 if gate.get("e2e_ge_best_always") else 1e-6)
+        # the tolerant accuracy itself, as a ratio: labels come from
+        # the same run's measurements, so this is stable within the
+        # normal threshold and trips only on a real model regression
+        if "learned_tol" in acc:
+            out["specialize/accuracy_learned_tol"] = max(
+                acc["learned_tol"], 1e-6)
+        spd = data.get("e2e", {}).get("speedup_vs_best_always")
+        if spd is not None:
+            # capped at the invariant's break-even, like the serve
+            # caps: extra headroom above 1.0x is workload luck, not a
+            # property the gate should hold future runs to
+            out["specialize/speedup_vs_best_always"] = min(spd,
+                                                           SPECIALIZE_CAP)
     else:
         raise ValueError(f"unknown artifact kind {kind!r}")
     return out
@@ -176,6 +211,11 @@ def fingerprint(kind: str, data: dict) -> dict:
                 "workload": data.get("workload"),
                 "checkpoint_every": data.get("checkpoint_every")}
     if kind == "chaos":
+        return {"smoke": data.get("smoke"),
+                "workload": data.get("workload")}
+    if kind == "specialize":
+        # carries the training matrix's pinned workload: a model
+        # trained on a different sweep is a different experiment
         return {"smoke": data.get("smoke"),
                 "workload": data.get("workload")}
     raise ValueError(f"unknown artifact kind {kind!r}")

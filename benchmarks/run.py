@@ -87,6 +87,16 @@ def main() -> None:
     ap.add_argument("--matrix-smoke", action="store_true",
                     help="with --matrix-only: tiny stand-ins, reduced "
                          "config set (the CI smoke job)")
+    ap.add_argument("--specialize-only", action="store_true",
+                    help="only train + evaluate the learned best-config "
+                         "specializer on results/BENCH_matrix.json "
+                         "(run --matrix-only first), refreshing results/"
+                         "specialize_model.json and writing results/"
+                         "BENCH_specialize.json (accuracy vs measured "
+                         "best and e2e geomean vs always-X baselines)")
+    ap.add_argument("--specialize-smoke", action="store_true",
+                    help="with --specialize-only: expect a --smoke "
+                         "matrix artifact (the CI smoke job)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -94,6 +104,11 @@ def main() -> None:
     if args.matrix_only:
         from benchmarks.matrix import run_matrix
         run_matrix(smoke=args.matrix_smoke)
+        return
+
+    if args.specialize_only:
+        from benchmarks.specialize import run_specialize
+        run_specialize(smoke=args.specialize_smoke)
         return
 
     if args.autotune_only:

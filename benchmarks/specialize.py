@@ -1,0 +1,224 @@
+"""Train + validate the learned best-config specializer (paper Sec. IV,
+the predictive half), tracked as ``results/BENCH_specialize.json``.
+
+Consumes the measured matrix artifact (``results/BENCH_matrix.json`` —
+run ``benchmarks.matrix`` first; CI orders the steps that way), fits
+the pure-numpy decision tree of
+:mod:`repro.core.specialize_learned` against each workload's
+measured-best cell, refreshes the serving model file
+(``results/specialize_model.json``), and evaluates every specialization
+policy the repo carries against the same measured cells:
+
+- **learned** — the serving model (admission-time features only),
+- **trace_augmented** — the ablation model that also sees the Fig. 5
+  direction/occupancy traces (an upper bound; serving can never use it
+  because no trace exists at admission time),
+- **static_full / static_partial** — the prose decision trees of
+  ``core/model.py`` fed by the Sec. III taxonomy profile of each
+  (re-materialized) input graph,
+- **always-X** — every single config of the sweep applied to every
+  workload (the paper's one-size-fits-all strawmen).
+
+Two metric families, both computed on the matrix's measured seconds so
+they are same-machine ratios like every other gated artifact:
+
+- **accuracy**: fraction of workloads whose chosen cell is the
+  measured-best one; the ``*_tol`` variant credits any cell within
+  ``tol`` (default 10%) of best, since near-tied cells flip on timing
+  noise.  Static-tree choices name cells a reduced (smoke) sweep never
+  measured, so every choice is projected onto the measured config
+  vocabulary first (:func:`repro.core.specialize_learned.
+  project_config`).
+- **e2e geomean us/graph**: geomean over workloads of the chosen
+  cell's measured time; ``speedup_vs_best_always`` divides the best
+  single-config policy's geomean by the learned policy's.
+
+The gate (``benchmarks/compare.py``, kind ``specialize``) enforces the
+two acceptance invariants — learned accuracy >= the static partial
+tree's, and learned e2e >= 1.0x the best always-X baseline — as
+1.0-vs-1e-6 metrics, plus the tolerant accuracy itself as a ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))          # `benchmarks` package
+sys.path.insert(0, str(_ROOT / "src"))  # `repro` package
+
+from repro.core import specialize_learned as sl
+from repro.core.model import specialize, specialize_partial
+from repro.core.properties import TABLE_III
+from repro.core.taxonomy import profile_graph
+from repro.graph.datasets import dataset_graph
+
+__all__ = ["run_specialize", "DEFAULT_TOL"]
+
+#: a cell within this fraction of the measured-best cell counts as a
+#: correct pick for the ``*_tol`` accuracies
+DEFAULT_TOL = 0.10
+
+
+def _geomean(xs):
+    xs = list(xs)
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 1.0
+
+
+def _taxonomy_profiles(matrix: dict) -> dict:
+    """Re-materialize each matrix input at its recorded scale and run
+    the Sec. III taxonomy — the static trees' graph-side input, which
+    the matrix artifact does not carry."""
+    wl = matrix["workload"]
+    profs = {}
+    for name, rec in matrix["inputs"].items():
+        g, source = dataset_graph(name, scale=wl["scale"],
+                                  block_size=wl["block_size"])
+        if source != rec.get("source", source):
+            print(f"specialize: input {name} resolves to {source} graph "
+                  f"but the matrix measured {rec['source']} — static-tree "
+                  "accuracy is evaluated against a different graph",
+                  flush=True)
+        profs[name] = profile_graph(g)
+    return profs
+
+
+def run_specialize(out_path: str = "results/BENCH_specialize.json",
+                   matrix_path: str = "results/BENCH_matrix.json",
+                   model_out: str = "results/specialize_model.json",
+                   smoke: bool = False, tol: float = DEFAULT_TOL,
+                   max_depth: int = 6) -> dict:
+    """Train the model, refresh ``model_out``, evaluate every policy;
+    write and return the artifact."""
+    mpath = Path(matrix_path)
+    if not mpath.exists():
+        raise SystemExit(
+            f"specialize: no matrix artifact at {matrix_path} — run "
+            "`python -m benchmarks.matrix" + (" --smoke" if smoke else "")
+            + "` first (the specializer trains on its measured cells)")
+    matrix = json.loads(mpath.read_text())
+    if bool(matrix.get("smoke")) != bool(smoke):
+        raise SystemExit(
+            f"specialize: matrix at {matrix_path} has smoke="
+            f"{matrix.get('smoke')} but this run asked smoke={smoke} — "
+            "train on a matrix produced with the same flag")
+
+    rows = sl.training_table(matrix)
+    avail = sorted({c for r in rows for c in r.seconds})
+    model = sl.fit_matrix(matrix, max_depth=max_depth)
+    model_path = sl.save_model(model, model_out)
+    trace_model = sl.fit_matrix(matrix, max_depth=max_depth,
+                                trace_features=True)
+    profs = _taxonomy_profiles(matrix)
+
+    policies = {
+        "learned": {r.workload: model.predict_name(r.features)
+                    for r in rows},
+        "trace_augmented": {
+            r.workload: trace_model.predict_name({**r.features, **r.trace})
+            for r in rows},
+        "static_full": {
+            r.workload: specialize(TABLE_III[r.app],
+                                   profs[r.input_name]).name
+            for r in rows},
+        "static_partial": {
+            r.workload: specialize_partial(TABLE_III[r.app],
+                                           profs[r.input_name]).name
+            for r in rows},
+    }
+
+    def seconds_of(r, name):
+        return r.seconds[sl.project_config(name, avail)]
+
+    def accuracy(choice, tolerance):
+        ok = sum(seconds_of(r, choice[r.workload])
+                 <= r.seconds[r.label] * (1.0 + tolerance) for r in rows)
+        return ok / len(rows)
+
+    def geomean_us(choice_fn):
+        return _geomean(seconds_of(r, choice_fn(r)) * 1e6 for r in rows)
+
+    acc = {}
+    for pname, choice in policies.items():
+        acc[pname] = accuracy(choice, 0.0)
+        acc[f"{pname}_tol"] = accuracy(choice, tol)
+    geo = {p: geomean_us(lambda r, c=c: c[r.workload])
+           for p, c in policies.items()}
+    geo["oracle"] = geomean_us(lambda r: r.label)
+    always = {c: geomean_us(lambda r, c=c: c) for c in avail}
+    best_always = min(always, key=always.get)
+    speedup = always[best_always] / geo["learned"]
+
+    per_workload = {
+        r.workload: {
+            "best": r.label,
+            **{p: sl.project_config(c[r.workload], avail)
+               for p, c in policies.items()},
+        } for r in rows}
+
+    result = {
+        "smoke": bool(smoke),
+        "workload": {
+            "matrix": matrix["workload"], "tol": tol,
+            "max_depth": max_depth, "features": list(sl.FEATURES),
+            "n_workloads": len(rows), "configs": avail,
+        },
+        "model": {
+            "path": model_path,
+            "version": sl.MODEL_VERSION,
+            "classes": list(model.classes),
+            "depth": model.to_json()["depth"],
+            "n_leaves": model.to_json()["n_leaves"],
+            "label_histogram": model.meta["label_histogram"],
+        },
+        "accuracy": acc,
+        "e2e": {
+            "geomean_us": {**geo, "always": always},
+            "best_always": {"config": best_always,
+                            "geomean_us": always[best_always]},
+            "speedup_vs_best_always": speedup,
+        },
+        "per_workload": per_workload,
+        "gate": {
+            "accuracy_ge_partial": acc["learned_tol"]
+            >= acc["static_partial_tol"],
+            "e2e_ge_best_always": speedup >= 1.0,
+        },
+    }
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2))
+    print(f"specialize: model -> {model_path} "
+          f"(depth={result['model']['depth']}, "
+          f"leaves={result['model']['n_leaves']})", flush=True)
+    for pname in policies:
+        print(f"specialize {pname}: accuracy={acc[pname]:.3f} "
+              f"(tol {tol:.0%}: {acc[pname + '_tol']:.3f}) "
+              f"geomean={geo[pname]:.1f}us", flush=True)
+    print(f"specialize_summary,{len(rows)},learned_acc="
+          f"{acc['learned_tol']:.3f};partial_acc="
+          f"{acc['static_partial_tol']:.3f};"
+          f"speedup_vs_always_{best_always}={speedup:.2f}x", flush=True)
+    return result
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="results/BENCH_specialize.json")
+    ap.add_argument("--matrix", default="results/BENCH_matrix.json",
+                    help="matrix artifact to train/evaluate on")
+    ap.add_argument("--model-out", default="results/specialize_model.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="expect a --smoke matrix (the CI job)")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL)
+    args = ap.parse_args(argv)
+    run_specialize(out_path=args.out, matrix_path=args.matrix,
+                   model_out=args.model_out, smoke=args.smoke,
+                   tol=args.tol)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,14 @@ from repro.core.frontier import (FrontierEdges, SparseFrontier,
                                  frontier_size, gather_frontier_edges,
                                  sparse_to_dense)
 from repro.core.model import specialize, specialize_partial
+from repro.core.specialize_learned import (DEFAULT_MODEL_PATH,
+                                           LearnedSpecializer,
+                                           ModelFileError,
+                                           SpecializeFallbackWarning,
+                                           features_from_graph, fit_matrix,
+                                           load_model, project_config,
+                                           resolve_config, save_model,
+                                           static_config_for)
 from repro.core.properties import (TABLE_III, AlgorithmicProperties, Locus,
                                    Traversal)
 from repro.core.taxonomy import (PAPER_GPU, TPU_V5E, GraphProfile, HwProfile,
@@ -47,6 +55,10 @@ __all__ = [
     "frontier_edges", "frontier_size", "gather_frontier_edges",
     "sparse_to_dense",
     "specialize", "specialize_partial",
+    "DEFAULT_MODEL_PATH", "LearnedSpecializer", "ModelFileError",
+    "SpecializeFallbackWarning", "features_from_graph", "fit_matrix",
+    "load_model", "project_config", "resolve_config", "save_model",
+    "static_config_for",
     "TABLE_III", "AlgorithmicProperties", "Locus", "Traversal",
     "PAPER_GPU", "TPU_V5E", "GraphProfile", "HwProfile", "classify",
     "profile_graph",

@@ -637,6 +637,14 @@ class RunResult:
     #: Executions this result took: 1 for a clean run, >1 when
     #: :class:`~repro.core.resilience.RetryPolicy` re-executed.
     attempts: int = 1
+    #: Name of the :class:`SystemConfig` this run actually executed
+    #: under (e.g. "DD1"); None for paths that never stamp it.
+    config_name: Optional[str] = None
+    #: How that config was chosen: "caller" (the config argument as
+    #: passed), "static" / "static_partial" (the prose decision trees)
+    #: or "learned" (the trained model) — see
+    #: :func:`repro.core.specialize_learned.resolve_config`.
+    config_source: str = "caller"
 
     def __post_init__(self):
         if self.outcome is None:
@@ -827,7 +835,8 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
         checkpoint_every: int = 0, retry=None, sentinels: bool = True,
         ring_capacity: Optional[int] = None,
         fault_injector=None,
-        checkpoint_dir: Optional[str] = None) -> RunResult:
+        checkpoint_dir: Optional[str] = None,
+        specialize=None) -> RunResult:
     """Iterate ``program`` on ``graph`` under ``config`` to convergence.
 
     ``engine`` picks the convergence loop: ``"fused"`` (default) runs
@@ -862,14 +871,31 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
     :class:`~repro.core.durability.CheckpointStore` and resumes a
     killed run from the newest intact generation, bit-identical to an
     uninterrupted run.
+
+    ``specialize`` resolves which config actually runs: ``"off"``
+    (default, also ``None``/``False``) executes the ``config`` argument
+    as passed; ``"static"`` applies the paper's full decision tree to
+    (program properties, graph taxonomy profile); ``"learned"``
+    consults the trained model at
+    :data:`repro.core.specialize_learned.DEFAULT_MODEL_PATH`, falling
+    back learned -> static partial -> caller with a structured
+    :class:`~repro.core.specialize_learned.SpecializeFallbackWarning`
+    when a tier is unavailable.  The resolved config (inheriting the
+    caller's ``n_chunks``) and its source are stamped on
+    ``RunResult.config_name`` / ``config_source``.
     """
     if engine not in ("fused", "host"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'fused' or 'host'")
+    config_source = "caller"
+    if specialize not in (None, False, "off"):
+        from repro.core.specialize_learned import resolve_config
+        config, config_source = resolve_config(program, graph, config,
+                                               specialize)
     if (checkpoint_every or retry is not None or fault_injector is not None
             or checkpoint_dir is not None):
         from repro.core.resilience import run_resilient
-        return run_resilient(
+        res = run_resilient(
             program, graph, config, key=key, max_iters=max_iters,
             use_pallas=use_pallas, warmup=warmup,
             sparse_edge_capacity=sparse_edge_capacity, engine=engine,
@@ -877,14 +903,19 @@ def run(program: VertexProgram, graph: Graph, config: SystemConfig,
             retry=retry, sentinels=sentinels,
             ring_capacity=ring_capacity, fault_injector=fault_injector,
             checkpoint_dir=checkpoint_dir)
-    ctx = EdgeContext.create(graph, config, use_pallas=use_pallas,
-                             sparse_edge_capacity=sparse_edge_capacity,
-                             autotune=autotune)
-    state = program.init(graph, key) if key is not None else program.init(graph)
-    state = jax.tree.map(jnp.asarray, state)
-    limit = max_iters or program.max_iters
-    runner = _run_fused if engine == "fused" else _run_host
-    return runner(program, ctx, state, limit, warmup)
+    else:
+        ctx = EdgeContext.create(graph, config, use_pallas=use_pallas,
+                                 sparse_edge_capacity=sparse_edge_capacity,
+                                 autotune=autotune)
+        state = program.init(graph, key) if key is not None \
+            else program.init(graph)
+        state = jax.tree.map(jnp.asarray, state)
+        limit = max_iters or program.max_iters
+        runner = _run_fused if engine == "fused" else _run_host
+        res = runner(program, ctx, state, limit, warmup)
+    res.config_name = config.name
+    res.config_source = config_source
+    return res
 
 
 def run_batch(program: VertexProgram, graphs, config: SystemConfig,
@@ -893,7 +924,8 @@ def run_batch(program: VertexProgram, graphs, config: SystemConfig,
               warmup: bool = True,
               sparse_edge_capacity: Optional[int] = None,
               autotune=None,
-              max_batch: Optional[int] = None) -> List[RunResult]:
+              max_batch: Optional[int] = None,
+              specialize=None) -> List[RunResult]:
     """Run ``program`` on many graphs as block-diagonal packed batches.
 
     The serving-path counterpart of :func:`run`: graphs are grouped
@@ -924,6 +956,12 @@ def run_batch(program: VertexProgram, graphs, config: SystemConfig,
     split).  The remaining knobs mean what they mean on :func:`run`;
     ``sparse_edge_capacity`` is applied per graph (0 disables the
     sparse path batch-wide).
+
+    ``specialize`` resolves each graph's config independently (see
+    :func:`run`): grouping then keys on *(padding bucket, resolved
+    config)*, so graphs whose predicted configs differ never share a
+    packed dispatch, and every result carries its own
+    ``config_name``/``config_source``.
     """
     from repro.core.batch import (BatchedEdgeContext, bucket_key,
                                   get_graph_batch, run_fused_batch)
@@ -935,18 +973,24 @@ def run_batch(program: VertexProgram, graphs, config: SystemConfig,
         raise ValueError(f"{len(keys)} keys for {len(graphs)} graphs")
     if max_batch is not None and max_batch < 1:
         raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if specialize in (None, False, "off"):
+        resolved = [(config, "caller")] * len(graphs)
+    else:
+        from repro.core.specialize_learned import resolve_config
+        resolved = [resolve_config(program, g, config, specialize)
+                    for g in graphs]
     limit = max_iters or program.max_iters
     groups: dict = {}
     for i, g in enumerate(graphs):
-        groups.setdefault(bucket_key(g), []).append(i)
+        groups.setdefault((bucket_key(g), resolved[i][0]), []).append(i)
     results: List[Optional[RunResult]] = [None] * len(graphs)
-    for idxs in groups.values():
+    for (_, group_config), idxs in groups.items():
         step = max_batch or len(idxs)
         for lo in range(0, len(idxs), step):
             part = idxs[lo:lo + step]
             batch = get_graph_batch(tuple(graphs[i] for i in part))
             bctx = BatchedEdgeContext.create(
-                batch, config, use_pallas=use_pallas,
+                batch, group_config, use_pallas=use_pallas,
                 sparse_edge_capacity=sparse_edge_capacity,
                 autotune=autotune)
             states = [program.init(graphs[i]) if keys is None
@@ -955,5 +999,7 @@ def run_batch(program: VertexProgram, graphs, config: SystemConfig,
             packed = batch.pack_state(states, pad=program.state_pad)
             for i, r in zip(part, run_fused_batch(program, batch, bctx,
                                                   packed, limit, warmup)):
+                r.config_name = group_config.name
+                r.config_source = resolved[i][1]
                 results[i] = r
     return results

@@ -41,6 +41,14 @@ executable serves every checkpoint interval), ``"sentinel_eval"`` (the
 standalone jitted sentinel battery used at host-engine boundaries and
 to re-check perturbed states) and ``"certificate"`` (the O(E) fixpoint
 proof evaluated once at convergence).
+
+The specialization layer (``repro.core.specialize_learned``) adds two
+kinds next to ``"tuned_tiling"``: ``"graph_profile"`` (the Sec. III
+taxonomy :class:`~repro.core.taxonomy.GraphProfile`, an O(E) +
+per-block clustering pass the static trees consume) and
+``"specialized_config"`` (the resolved best-config decision per
+(properties, mode, model generation) — repeat admission of an
+already-seen graph never re-extracts features or re-walks a tree).
 """
 from __future__ import annotations
 

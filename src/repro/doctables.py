@@ -1,0 +1,275 @@
+"""Single source of truth for the README's knob tables.
+
+README.md documents three knob surfaces — ``run()``, the gateway
+constructor, and per-``submit`` request knobs — that historically
+drifted from the actual signatures as PRs grew them.  This module pins
+each documented knob row next to the callable it describes, renders
+the markdown tables, and rewrites the README blocks between
+``<!-- knobs:<section>:begin/end -->`` markers:
+
+    PYTHONPATH=src python -m repro.doctables --check   # CI / tests
+    PYTHONPATH=src python -m repro.doctables --write   # regenerate
+
+``tests/test_docs.py`` enforces both directions of freshness: every
+documented knob must exist in the target's ``inspect.signature`` and
+every signature parameter must have a documented row (so adding a knob
+without documenting it fails the suite), and the README block must
+equal the rendered table byte for byte.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+__all__ = ["SECTIONS", "render", "doc_knobs", "signature_knobs",
+           "inject", "check_text", "marker"]
+
+#: one documented row: (knob names it covers, values column, meaning)
+Row = Tuple[Tuple[str, ...], str, str]
+
+_RUN_ROWS: List[Row] = [
+    (("engine",), '`"fused"` \\| `"host"`',
+     "whole-loop `lax.while_loop` dispatch vs kernel-per-iteration "
+     "oracle"),
+    (("use_pallas",), "`False` \\| `True`",
+     "XLA scatter/segment reductions vs the blocked Pallas reducers"),
+    (("sparse_edge_capacity",), "`ceil(E/alpha)` \\| `0` \\| any int",
+     "static gather capacity of the sparse frontier path (0 disables "
+     "it)"),
+    (("autotune",), '`"off"` \\| `"heuristic"` \\| `"measure"`',
+     "blocked-reducer tiling plans: static default / degree-heuristic "
+     "`suggest_plan` (zero measurement) / empirical candidate sweep, "
+     "cached per graph and persisted to `results/autotune_cache.json` "
+     "keyed by degree signature"),
+    (("specialize",), '`"off"` \\| `"static"` \\| `"learned"`',
+     "resolve the config this workload actually runs under: as passed "
+     "/ the paper's full decision tree on (Table III properties, "
+     "taxonomy profile) / the trained model "
+     "(`results/specialize_model.json`), falling back learned → "
+     "static partial → caller with a structured warning; resolved "
+     "choice cached in `PLAN_CACHE` (`specialized_config`) and "
+     "stamped on `RunResult.config_name`/`config_source` — see "
+     "docs/SPECIALIZATION.md"),
+    (("max_iters", "warmup"), "program default; `True`",
+     "iteration cap; compile outside the timed region"),
+    (("checkpoint_every",), "`None` \\| int",
+     "segment the fused loop every K iterations, snapshotting each "
+     "boundary into a host-side `CheckpointRing` — bit-identical to "
+     "the unsegmented run (one compiled executable serves every "
+     "segment)"),
+    (("retry",), "`None` \\| `RetryPolicy(max_attempts, backoff_s)`",
+     "on a sentinel trip / runner exception: roll back one checkpoint "
+     "deeper per attempt and walk the degradation chain (as-is → "
+     "default plans → dense → fused → host); exhausted attempts "
+     'return `outcome="faulted"` with the fault history'),
+    (("sentinels",), "`True` \\| `False`",
+     "per-segment invariant battery (NaN guard, declared "
+     "monotonicity, custom program sentinels, occupancy sanity) plus "
+     "the O(E) convergence certificate at retire"),
+    (("ring_capacity",), "`4` \\| int",
+     "checkpoints kept (pinned initial + newest `C-1`); `1` = "
+     "cold-restart semantics"),
+    (("checkpoint_dir",), "`None` \\| path",
+     "spill every ring boundary to a durable `CheckpointStore` "
+     "(atomic write-then-rename, versioned header, sha256 content "
+     "digest); a rerun resumes from the newest intact generation "
+     "**bit-identical** to the uninterrupted run — corrupt "
+     "generations are rejected with a structured `corrupt_checkpoint` "
+     "fault and fall back to the previous one, then cold restart"),
+    (("fault_injector",), "`None` \\| `FaultInjector`",
+     "test/benchmark hook — seeded injectors in "
+     "`repro.testing.faults`"),
+]
+
+_GATEWAY_ROWS: List[Row] = [
+    (("max_batch", "slice_len"), "`8`, `4`",
+     "roster slots packed per lane and iterations per fused slice "
+     "(the continuous-batching grain)"),
+    (("max_queue",), "`256`",
+     "waiting-queue bound; admissions beyond it raise "
+     "`GatewayBackpressure`"),
+    (("clock",), "`time.monotonic`",
+     "injectable time source (tests drive deterministic clocks)"),
+    (("retry", "sentinels"), "`RetryPolicy(max_attempts=2)`, `True`",
+     "slice-level fault containment: host-side sentinel battery on "
+     "every commit, whole-roster retry then solo isolation, "
+     "quarantine with a structured `ExecutionFault`"),
+    (("fault_injector",), "`None` \\| `FaultInjector`",
+     "seeded fault harness hook (`repro.testing.faults`)"),
+    (("journal_dir",), "`None` \\| path",
+     "write-ahead admission journal: every submit/admit/slice-commit/"
+     "retire is appended (CRC-framed, fsynced) before the in-memory "
+     "step completes, graphs persisted once content-addressed, "
+     "per-ticket slice-boundary states in durable checkpoint stores. "
+     "After a crash, `recover(journal_dir)` replays the journal and "
+     "finishes every unfinished ticket **bit-identical** to the "
+     "uninterrupted gateway; replay appends nothing, so recovering "
+     "twice is idempotent"),
+    (("breaker_threshold", "breaker_cooldown"), "`3`, `4`",
+     "per-lane circuit breaker: that many *consecutive* faulty slices "
+     "open it (lane routes solo-degraded B=1 — bit-identical, just "
+     "unbatched), after `cooldown` solo rounds a packed probe "
+     "half-opens it, clean probe closes. Counters in `stats()`: "
+     "`shed`, `breaker_opens/closes/probes`, `solo_degraded_slices`, "
+     "`recovered_tickets`"),
+]
+
+_SUBMIT_ROWS: List[Row] = [
+    (("key", "max_iters"), "`None`; program default",
+     "per-request PRNG key (randomized programs) and iteration cap"),
+    (("deadline_s",), "`None` \\| seconds",
+     "two protections: a request still iterating past its deadline "
+     "retires at the next slice boundary with partial state flagged "
+     "`timed_out`; and when the *projected* completion delay "
+     "(admission waves ahead × mean service time over the newest "
+     "`GatewayStats.SERVICE_WINDOW` completions — queue wait "
+     "excluded, so past congestion never biases admission) already "
+     "exceeds the deadline, the submit is shed with a structured "
+     '`OverloadError(code="overload_shed")` before touching lane '
+     "state; deadline-free submits and cold gateways never shed"),
+    (("use_pallas", "sparse_edge_capacity", "autotune"),
+     "as on `run()`",
+     "execution knobs, part of the lane key — requests differing in "
+     "them never share a packed roster"),
+    (("specialize",), '`"off"` \\| `"static"` \\| `"learned"`',
+     "resolve this request's config at admission time (after the "
+     "admission checks, so shed/rejected traffic never pays the "
+     "profiling cost); the resolved config picks the lane, is "
+     "journaled for crash recovery, and its source lands on the "
+     "result's `config_source` and in `stats()[\"specialized\"]` — "
+     "see docs/SPECIALIZATION.md"),
+]
+
+#: section -> (target "module:qualname", params excluded from the
+#: cross-check, header row, documented rows)
+SECTIONS: Dict[str, dict] = {
+    "run": {
+        "target": "repro.core.executor:run",
+        "exclude": ("program", "graph", "config", "key"),
+        "header": ("Knob", "Values (default first)", "What it picks"),
+        "rows": _RUN_ROWS,
+    },
+    "gateway": {
+        "target": "repro.launch.serve:GraphGateway.__init__",
+        "exclude": ("self",),
+        "header": ("Knob", "Default", "What it does"),
+        "rows": _GATEWAY_ROWS,
+    },
+    "submit": {
+        "target": "repro.launch.serve:ContinuousScheduler.submit",
+        "exclude": ("self", "program", "graph", "config"),
+        "header": ("Knob (per `submit`)", "Values (default first)",
+                   "What it does"),
+        "rows": _SUBMIT_ROWS,
+    },
+}
+
+# `run()` documents `key=` in prose, not the table; submit documents it
+# as a row — so "key" sits in run's exclude list and submit's rows.
+
+
+def doc_knobs(section: str) -> set:
+    """Knob names the section's table documents."""
+    return {n for names, _, _ in SECTIONS[section]["rows"] for n in names}
+
+
+def signature_knobs(section: str) -> set:
+    """Parameter names of the section's target callable (minus the
+    structural ones in ``exclude``)."""
+    spec = SECTIONS[section]
+    mod_name, qualname = spec["target"].split(":")
+    obj = importlib.import_module(mod_name)
+    for attr in qualname.split("."):
+        obj = getattr(obj, attr)
+    params = inspect.signature(obj).parameters
+    return {p for p in params if p not in spec["exclude"]}
+
+
+def render(section: str) -> str:
+    """The section's markdown table (no markers)."""
+    spec = SECTIONS[section]
+    h = spec["header"]
+    lines = [f"| {h[0]} | {h[1]} | {h[2]} |", "|---|---|---|"]
+    for names, values, desc in spec["rows"]:
+        knob = ", ".join(f"`{n}=`" for n in names)
+        lines.append(f"| {knob} | {values} | {desc} |")
+    return "\n".join(lines)
+
+
+def marker(section: str, which: str) -> str:
+    if which == "begin":
+        return (f"<!-- knobs:{section}:begin — generated by `python -m "
+                "repro.doctables --write`; edit src/repro/doctables.py, "
+                "not this table -->")
+    return f"<!-- knobs:{section}:end -->"
+
+
+def _block_re(section: str) -> re.Pattern:
+    return re.compile(
+        re.escape(marker(section, "begin")) + r"\n(?:.*?\n)?"
+        + re.escape(marker(section, "end")), re.DOTALL)
+
+
+def inject(text: str) -> str:
+    """Rewrite every marked block in ``text`` with the fresh render;
+    raises ValueError for a section whose markers are missing or
+    malformed (a silent skip would let the table drift again)."""
+    for section in SECTIONS:
+        block = (marker(section, "begin") + "\n" + render(section)
+                 + "\n" + marker(section, "end"))
+        pat = _block_re(section)
+        if not pat.search(text):
+            raise ValueError(
+                f"README markers for knob table {section!r} missing or "
+                f"malformed (expected {marker(section, 'begin')!r} ... "
+                f"{marker(section, 'end')!r})")
+        text = pat.sub(lambda _m: block, text)
+    return text
+
+
+def check_text(text: str) -> List[str]:
+    """Drift report for a README body: one message per stale/missing
+    block, empty when everything is fresh."""
+    problems = []
+    for section in SECTIONS:
+        m = _block_re(section).search(text)
+        if not m:
+            problems.append(f"{section}: markers missing")
+            continue
+        want = (marker(section, "begin") + "\n" + render(section)
+                + "\n" + marker(section, "end"))
+        if m.group(0) != want:
+            problems.append(f"{section}: table out of date (run "
+                            "`python -m repro.doctables --write`)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--readme", default="README.md")
+    ap.add_argument("--write", action="store_true",
+                    help="rewrite the marked README blocks in place")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any marked block is stale")
+    args = ap.parse_args(argv)
+    path = Path(args.readme)
+    text = path.read_text()
+    if args.write:
+        path.write_text(inject(text))
+        print(f"doctables: rewrote {len(SECTIONS)} knob tables in {path}")
+        return 0
+    problems = check_text(text)
+    for p in problems:
+        print(f"doctables: {p}")
+    if not problems:
+        print(f"doctables: {len(SECTIONS)} knob tables fresh in {path}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

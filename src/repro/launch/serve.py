@@ -156,6 +156,10 @@ class Ticket:
         self.program = program
         self.graph = graph
         self.config = config
+        #: how ``config`` was chosen at admission: "caller" unless the
+        #: submit-side ``specialize=`` knob resolved it (then "static" /
+        #: "static_partial" / "learned") — stamped onto the result
+        self.config_source = "caller"
         self.key = key
         self.max_iters = max_iters
         self.deadline_s = deadline_s
@@ -231,6 +235,9 @@ class GatewayStats:
     rejected: int = 0
     backpressure_rejections: int = 0
     shed: int = 0
+    #: admissions whose config was resolved by a specialization tier
+    #: (``specialize=`` knob) rather than taken from the caller
+    specialized: int = 0
     recovered_tickets: int = 0
     breaker_opens: int = 0
     breaker_closes: int = 0
@@ -322,6 +329,7 @@ class GatewayStats:
             "faulted": self.faulted, "rejected": self.rejected,
             "backpressure_rejections": self.backpressure_rejections,
             "shed": self.shed,
+            "specialized": self.specialized,
             "recovered_tickets": self.recovered_tickets,
             "breaker_opens": self.breaker_opens,
             "breaker_closes": self.breaker_closes,
@@ -759,7 +767,9 @@ class _Lane:
                 direction_trace="".join(t._trace) if t._traced else None,
                 occupancy_trace=t._occs if t._occ_traced else None,
                 engine="gateway", dispatches=t._dispatches,
-                timed_out=(outcome == "timed_out")), None, now)
+                timed_out=(outcome == "timed_out"),
+                config_name=t.config.name,
+                config_source=t.config_source), None, now)
         stats.record_done(t, outcome)
         if self.journal is not None and t.jid is not None:
             self.journal.record_retire(t.jid, outcome)
@@ -829,7 +839,7 @@ class ContinuousScheduler:
                deadline_s: Optional[float] = None,
                use_pallas: bool = False,
                sparse_edge_capacity: Optional[int] = None,
-               autotune=None) -> Ticket:
+               autotune=None, specialize=None) -> Ticket:
         """Admit one query; returns its :class:`Ticket`.
 
         Raises :class:`AdmissionError` for structurally invalid graphs,
@@ -838,6 +848,16 @@ class ContinuousScheduler:
         whose projected queue delay already exceeds its ``deadline_s``
         (deadline-aware load shedding) — all *before* the request
         touches any lane state.
+
+        ``specialize`` (``"off"``/``"static"``/``"learned"``, default
+        off) resolves the config this request actually runs under at
+        admission time via
+        :func:`repro.core.specialize_learned.resolve_config` — after
+        the admission checks, so shed/rejected traffic never pays the
+        profiling cost.  The resolved config picks the lane (requests
+        predicted into different configs never share a packed roster),
+        is journaled for crash recovery, and is stamped with its source
+        on the result's ``config_name``/``config_source``.
         """
         errors = validate_graph(graph)
         if errors:
@@ -861,6 +881,13 @@ class ContinuousScheduler:
         cap = (None if sparse_edge_capacity is None
                else int(sparse_edge_capacity))
         mode = _normalize_autotune(autotune)
+        config_source = "caller"
+        if specialize not in (None, False, "off"):
+            from repro.core.specialize_learned import resolve_config
+            config, config_source = resolve_config(program, graph, config,
+                                                   specialize)
+            if config_source != "caller":
+                self.stats.specialized += 1
         lane_key = (id(program), config, bool(use_pallas), cap, mode,
                     bucket_key(graph))
         lane = self._lanes.get(lane_key)
@@ -871,13 +898,17 @@ class ContinuousScheduler:
                 breaker=_Breaker(self.breaker_threshold,
                                  self.breaker_cooldown))
         t = Ticket(program, graph, config, key, max_iters, deadline_s)
+        t.config_source = config_source
         t.enqueued_at = self.clock()
         if self.journal is not None:
+            # the *resolved* config is journaled, so recovery replays the
+            # decision without needing the model file to still exist
             t.jid = self.journal.record_submit(
                 program, graph, config, key=key, max_iters=max_iters,
                 deadline_s=deadline_s,
                 knobs={"use_pallas": bool(use_pallas),
-                       "sparse_edge_capacity": cap, "autotune": mode})
+                       "sparse_edge_capacity": cap, "autotune": mode,
+                       "config_source": config_source})
         lane.queue.append(t)
         self.stats.record_submit(t)
         return t
@@ -929,6 +960,7 @@ class ContinuousScheduler:
             t = Ticket(program, graph, config,
                        _deserialize_key(sub["key"]), sub["max_iters"],
                        sub["deadline_s"])
+            t.config_source = knobs.get("config_source", "caller")
             t.jid = jid
             t.enqueued_at = self.clock()
             cp, _ckpt_faults = self.journal.store_for(jid).load_latest()

@@ -89,6 +89,28 @@ def _matrix_artifact(gain=1.4, source="synthetic"):
     }
 
 
+def _specialize_artifact(acc=0.83, partial_ok=True, e2e_ok=True,
+                         speedup=1.34):
+    return {
+        "smoke": True,
+        "workload": {"matrix": {"scale": 256, "ref_config": "TG0"},
+                     "tol": 0.10, "max_depth": 6,
+                     "n_workloads": 42,
+                     "configs": ["DD1", "SG1", "TG0"]},
+        "model": {"path": "results/specialize_model.json", "version": 1,
+                  "classes": ["DD1", "SG1", "TG0"], "depth": 6,
+                  "n_leaves": 17, "label_histogram": {"DD1": 30}},
+        "accuracy": {"learned": acc, "learned_tol": acc,
+                     "static_partial": 0.45, "static_partial_tol": 0.55},
+        "e2e": {"geomean_us": {"learned": 2628.0,
+                               "always": {"DD1": 3511.0}},
+                "best_always": {"config": "DD1", "geomean_us": 3511.0},
+                "speedup_vs_best_always": speedup},
+        "gate": {"accuracy_ge_partial": partial_ok,
+                 "e2e_ge_best_always": e2e_ok},
+    }
+
+
 class TestExtractAndCompare:
     def test_extract_metric_names(self):
         m = extract_metrics("dispatch", _dispatch_artifact())
@@ -193,6 +215,41 @@ class TestExtractAndCompare:
             rep = compare_artifact("chaos", _chaos_artifact(), broken)
             assert rep["status"] == "regression"
             assert rep["worst"][0][1] == pytest.approx(1e6)
+
+    def test_specialize_invariants_and_caps(self):
+        from benchmarks.compare import SPECIALIZE_CAP
+        m = extract_metrics("specialize", _specialize_artifact())
+        assert m["specialize/accuracy_ge_partial"] == 1.0
+        assert m["specialize/e2e_ge_best_always"] == 1.0
+        assert m["specialize/accuracy_learned_tol"] == pytest.approx(0.83)
+        # headroom above break-even is capped, like the serve caps
+        assert m["specialize/speedup_vs_best_always"] == SPECIALIZE_CAP
+        base = _specialize_artifact()
+        rep = compare_artifact("specialize", base, copy.deepcopy(base))
+        assert rep["status"] == "ok"
+        assert rep["geomean_ratio"] == pytest.approx(1.0)
+
+    def test_specialize_broken_acceptance_blows_the_gate(self):
+        # either acceptance invariant breaking must fail unmissably;
+        # a genuine accuracy drop regresses through the plain ratio
+        for broken in (_specialize_artifact(partial_ok=False),
+                       _specialize_artifact(e2e_ok=False)):
+            rep = compare_artifact("specialize", _specialize_artifact(),
+                                   broken)
+            assert rep["status"] == "regression"
+            assert rep["worst"][0][1] == pytest.approx(1e6)
+        worse = _specialize_artifact(acc=0.5)
+        rep = compare_artifact("specialize", _specialize_artifact(),
+                               worse)
+        assert rep["ratios"]["specialize/accuracy_learned_tol"] \
+            == pytest.approx(0.83 / 0.5)
+
+    def test_specialize_training_matrix_pins_fingerprint(self):
+        base = _specialize_artifact()
+        moved = _specialize_artifact()
+        moved["workload"]["matrix"]["scale"] = 512
+        assert compare_artifact("specialize", base,
+                                moved)["status"] == "incompatible"
 
     def test_chaos_smoke_flag_pins_fingerprint(self):
         base = _chaos_artifact()

@@ -1,0 +1,66 @@
+"""Documentation freshness (ISSUE 10 satellites).
+
+The README's knob tables are generated from ``src/repro/doctables.py``;
+this suite pins both directions of freshness — every documented knob
+exists in the target callable's signature and every signature knob has
+a documented row — plus byte-for-byte README blocks, and runs the
+dead-relative-link checker over every markdown file in the repo.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import doctables
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from tools.check_docs_links import broken_links  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def readme_text():
+    return (ROOT / "README.md").read_text()
+
+
+class TestKnobTables:
+    @pytest.mark.parametrize("section", sorted(doctables.SECTIONS))
+    def test_documented_knobs_match_signature(self, section):
+        """A knob added to the code without a doc row (or a doc row for
+        a removed knob) fails here, naming the drift."""
+        doc = doctables.doc_knobs(section)
+        sig = doctables.signature_knobs(section)
+        assert doc == sig, (
+            f"knob table {section!r} drifted: undocumented={sorted(sig - doc)} "
+            f"stale_rows={sorted(doc - sig)} — edit src/repro/doctables.py "
+            "and run `python -m repro.doctables --write`")
+
+    def test_readme_blocks_are_fresh(self, readme_text):
+        assert doctables.check_text(readme_text) == []
+
+    def test_stale_block_is_detected(self, readme_text):
+        stale = readme_text.replace("| `engine=` |", "| `enigne=` |")
+        assert any("out of date" in p for p in doctables.check_text(stale))
+
+    def test_missing_markers_raise_on_inject(self):
+        with pytest.raises(ValueError, match="markers"):
+            doctables.inject("no markers here\n")
+
+    def test_inject_is_idempotent(self, readme_text):
+        assert doctables.inject(readme_text) == readme_text
+
+
+class TestDocLinks:
+    def test_no_dead_relative_links(self):
+        bad = broken_links(ROOT)
+        assert bad == [], "dead links: " + "; ".join(
+            f"{md} -> {target}" for md, target in bad)
+
+    def test_checker_catches_a_planted_dead_link(self, tmp_path):
+        (tmp_path / "a.md").write_text(
+            "[ok](b.md) and [dead](missing.md) and "
+            "[ext](https://example.com) and `[i](j)`\n")
+        (tmp_path / "b.md").write_text("see [anchor](a.md#top)\n")
+        bad = broken_links(tmp_path)
+        assert [(str(md), t) for md, t in bad] == [("a.md", "missing.md")]

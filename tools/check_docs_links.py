@@ -1,0 +1,90 @@
+"""Dead-link checker for the repo's markdown docs.
+
+Walks every ``*.md`` under the repo root, extracts relative links
+(``[text](path)`` and ``[text](path#anchor)``), and verifies each
+target exists on disk relative to the file that links it.  External
+schemes (http/https/mailto) and pure in-page anchors are skipped —
+this guards the *repo-internal* doc graph (README → docs/*, docs
+cross-references), which is the part that silently rots when files
+move.
+
+    python tools/check_docs_links.py          # exit 1 + listing on rot
+    python tools/check_docs_links.py --root X
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+__all__ = ["broken_links", "iter_md_files", "links_in"]
+
+#: ``[label](target)`` with an optional ``#anchor`` split off; the
+#: target group deliberately excludes ``)``, ``#`` and whitespace so
+#: titles (``[x](y "title")``) and anchors don't pollute the path
+_LINK_RE = re.compile(r"\[[^\]]*\]\(\s*([^)#\s]+)(#[^)]*)?\s*\)")
+
+#: inline code spans are stripped first so ``[i](j)`` indexing examples
+#: inside backticks never count as links
+_CODE_SPAN_RE = re.compile(r"`[^`]*`")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+
+_SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache",
+              "node_modules", ".venv", "venv"}
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not any(part in _SKIP_DIRS for part in path.parts):
+            yield path
+
+
+def links_in(text: str):
+    """Yield relative-link targets, skipping fenced code blocks,
+    inline code spans, external schemes and pure anchors."""
+    in_fence = False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(_CODE_SPAN_RE.sub("", line)):
+            target = m.group(1)
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            yield target
+
+
+def broken_links(root: Path):
+    """``[(md_file, target)]`` for every relative link whose target
+    does not exist on disk."""
+    broken = []
+    for md in iter_md_files(root):
+        for target in links_in(md.read_text(encoding="utf-8")):
+            base = root if target.startswith("/") else md.parent
+            if not (base / target.lstrip("/")).exists():
+                broken.append((md.relative_to(root), target))
+    return broken
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=Path(__file__).resolve().parent.parent,
+                    type=Path, help="repo root to scan (default: repo)")
+    args = ap.parse_args(argv)
+    bad = broken_links(args.root.resolve())
+    for md, target in bad:
+        print(f"docs-links: {md}: dead relative link -> {target}")
+    if bad:
+        print(f"docs-links: {len(bad)} dead link(s)")
+        return 1
+    n = sum(1 for _ in iter_md_files(args.root.resolve()))
+    print(f"docs-links: ok ({n} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
